@@ -1,0 +1,92 @@
+"""Shared benchmark harness: timing, CSV output, workload builders."""
+
+from __future__ import annotations
+
+import csv
+import os
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.constraints import DC, FD, Atom
+from repro.core.executor import Daisy, DaisyConfig
+from repro.core.offline import OfflineCleaner
+from repro.core.operators import Pred, Query
+from repro.core.relation import make_relation
+from repro.data.generators import inject_fd_errors, ssb_lineorder
+
+OUT_DIR = os.environ.get("BENCH_OUT", "experiments/bench")
+
+
+def timed(fn: Callable, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, time.perf_counter() - t0
+
+
+def write_csv(name: str, header: Sequence[str], rows: List[Sequence]) -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, f"{name}.csv")
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        w.writerows(rows)
+    return path
+
+
+def build_lineorder_db(
+    n: int = 4096,
+    n_orderkeys: int = 512,
+    n_suppkeys: int = 64,
+    frac_rows: float = 0.1,
+    k: int = 8,
+    seed: int = 0,
+):
+    """Dirty lineorder relation + the FD rule (paper §7 setup)."""
+    clean = ssb_lineorder(n, n_orderkeys, n_suppkeys, seed=seed)
+    ds = inject_fd_errors(
+        clean, "orderkey", "suppkey", frac_groups=1.0, frac_rows=frac_rows,
+        n_values=n_suppkeys, seed=seed + 1,
+    )
+    rel = make_relation(
+        ds.data, overlay=["orderkey", "suppkey"], k=k, rules=["fd_os"]
+    )
+    fd = FD("fd_os", "orderkey", "suppkey")
+    return rel, fd, ds
+
+
+def sp_workload(
+    n_queries: int,
+    col: str,
+    values: Sequence,
+    ranges: bool = False,
+) -> List[Query]:
+    """Non-overlapping SP queries (equality or range filters)."""
+    qs = []
+    for i in range(n_queries):
+        if ranges:
+            lo, hi = values[i]
+            qs.append(
+                Query("t", preds=(Pred(col, ">=", lo), Pred(col, "<", hi)))
+            )
+        else:
+            qs.append(Query("t", preds=(Pred(col, "==", values[i]),)))
+    return qs
+
+
+def run_daisy(rel, rules, queries, cfg: Optional[DaisyConfig] = None) -> float:
+    daisy = Daisy({"t": rel}, {"t": rules}, cfg or DaisyConfig())
+    t0 = time.perf_counter()
+    for q in queries:
+        daisy.execute(q)
+    return time.perf_counter() - t0
+
+
+def run_offline(rel, rules, queries, cfg: Optional[DaisyConfig] = None) -> float:
+    off = OfflineCleaner({"t": rel}, {"t": rules}, cfg)
+    t0 = time.perf_counter()
+    off.clean_all()
+    for q in queries:
+        off.execute(q)
+    return time.perf_counter() - t0

@@ -1,0 +1,42 @@
+"""Fig. 7 — SP cost vs orderkey (lhs) cardinality; rhs-filter queries.
+
+Daisy vs offline over lineorder with FD orderkey -> suppkey; 50
+non-overlapping range queries on the rhs covering the whole dataset.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import build_lineorder_db, run_daisy, run_offline, write_csv
+from repro.core.executor import DaisyConfig
+from repro.core.operators import Pred, Query
+
+N = 4096
+QUERIES = 50
+
+
+def rhs_range_queries(n_suppkeys: int):
+    edges = np.linspace(0, n_suppkeys, QUERIES + 1).astype(int)
+    return [
+        Query("t", preds=(Pred("suppkey", ">=", int(lo)), Pred("suppkey", "<", int(hi))))
+        for lo, hi in zip(edges[:-1], edges[1:])
+    ]
+
+
+def run(quick: bool = False):
+    rows = []
+    cards = [64, 256, 1024] if quick else [64, 256, 1024, 2048]
+    for n_ok in cards:
+        rel, fd, _ = build_lineorder_db(N, n_ok, max(n_ok // 8, 16))
+        qs = rhs_range_queries(max(n_ok // 8, 16))
+        t_d = run_daisy(rel, [fd], qs, DaisyConfig(expected_queries=QUERIES))
+        t_o = run_offline(rel, [fd], qs)
+        rows.append([n_ok, round(t_d, 3), round(t_o, 3), round(t_o / t_d, 2)])
+        print(f"fig07 orderkeys={n_ok}: daisy {t_d:.2f}s offline {t_o:.2f}s "
+              f"(x{t_o/t_d:.2f})")
+    return write_csv("fig07", ["orderkeys", "daisy_s", "offline_s", "speedup"], rows)
+
+
+if __name__ == "__main__":
+    run()

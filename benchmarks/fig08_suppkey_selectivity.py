@@ -1,0 +1,40 @@
+"""Fig. 8 — SP cost vs suppkey (rhs) cardinality; lhs-filter queries
+(these exercise the transitive-closure relaxation)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import build_lineorder_db, run_daisy, run_offline, write_csv
+from repro.core.executor import DaisyConfig
+from repro.core.operators import Pred, Query
+
+N = 4096
+QUERIES = 50
+N_ORDERKEYS = 512
+
+
+def lhs_range_queries():
+    edges = np.linspace(0, N_ORDERKEYS, QUERIES + 1).astype(int)
+    return [
+        Query("t", preds=(Pred("orderkey", ">=", int(lo)), Pred("orderkey", "<", int(hi))))
+        for lo, hi in zip(edges[:-1], edges[1:])
+    ]
+
+
+def run(quick: bool = False):
+    rows = []
+    cards = [16, 64] if quick else [16, 64, 256, 1024]
+    for n_sk in cards:
+        rel, fd, _ = build_lineorder_db(N, N_ORDERKEYS, n_sk)
+        qs = lhs_range_queries()
+        t_d = run_daisy(rel, [fd], qs, DaisyConfig(expected_queries=QUERIES))
+        t_o = run_offline(rel, [fd], qs)
+        rows.append([n_sk, round(t_d, 3), round(t_o, 3), round(t_o / t_d, 2)])
+        print(f"fig08 suppkeys={n_sk}: daisy {t_d:.2f}s offline {t_o:.2f}s "
+              f"(x{t_o/t_d:.2f})")
+    return write_csv("fig08", ["suppkeys", "daisy_s", "offline_s", "speedup"], rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,66 @@
+"""Fig. 10 — single rule vs two overlapping rules (shared rhs attribute).
+
+phi: orderkey -> suppkey and psi: address -> suppkey over the joined
+lineorder x suppliers table; 50 non-overlapping queries.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import run_daisy, run_offline, write_csv
+from repro.core.constraints import FD
+from repro.core.executor import DaisyConfig
+from repro.core.operators import Pred, Query
+from repro.core.relation import make_relation
+from repro.data.generators import inject_fd_errors, ssb_lineorder, suppliers
+
+N = 4096
+QUERIES = 50
+
+
+def build():
+    n_sup = 64
+    lo = ssb_lineorder(N, 512, n_sup, seed=3)
+    sup = suppliers(n_sup, seed=4)
+    addr_of_sup = np.zeros(n_sup, np.int32)
+    addr_of_sup[sup["suppkey"]] = sup["address"]
+    joined = dict(lo)
+    joined["address"] = addr_of_sup[lo["suppkey"]]
+    ds = inject_fd_errors(joined, "orderkey", "suppkey", 1.0, 0.1, n_sup, seed=5)
+    return ds
+
+
+def queries():
+    edges = np.linspace(0, 512, QUERIES + 1).astype(int)
+    return [
+        Query("t", preds=(Pred("orderkey", ">=", int(a)), Pred("orderkey", "<", int(b))))
+        for a, b in zip(edges[:-1], edges[1:])
+    ]
+
+
+def run(quick: bool = False):
+    nq = 15 if quick else QUERIES
+    qs = queries()[:nq]
+    phi = FD("phi", "orderkey", "suppkey")
+    psi = FD("psi", "address", "suppkey")
+    rows = []
+    for label, rules in [("phi", [phi]), ("phi+psi", [phi, psi])]:
+        ds = build()
+        rel = make_relation(
+            ds.data, overlay=["orderkey", "suppkey", "address"], k=8,
+            rules=[r.name for r in rules],
+        )
+        t_d = run_daisy(rel, rules, qs, DaisyConfig(expected_queries=nq))
+        rel = make_relation(
+            ds.data, overlay=["orderkey", "suppkey", "address"], k=8,
+            rules=[r.name for r in rules],
+        )
+        t_o = run_offline(rel, rules, qs)
+        rows.append([label, round(t_d, 3), round(t_o, 3)])
+        print(f"fig10 {label}: daisy {t_d:.2f}s offline {t_o:.2f}s")
+    return write_csv("fig10", ["rules", "daisy_s", "offline_s"], rows)
+
+
+if __name__ == "__main__":
+    run()

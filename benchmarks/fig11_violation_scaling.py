@@ -1,0 +1,42 @@
+"""Fig. 11 — cost with an increasing fraction of erroneous orderkeys
+(20% .. 80%); the dirty-group statistics skip clean groups."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import run_daisy, run_offline, write_csv
+from repro.core.constraints import FD
+from repro.core.executor import DaisyConfig
+from repro.core.operators import Pred, Query
+from repro.core.relation import make_relation
+from repro.data.generators import inject_fd_errors, ssb_lineorder
+
+N = 4096
+QUERIES = 50
+
+
+def run(quick: bool = False):
+    fracs = [0.2, 0.8] if quick else [0.2, 0.4, 0.6, 0.8]
+    nq = 20 if quick else QUERIES
+    edges = np.linspace(0, 512, nq + 1).astype(int)
+    qs = [
+        Query("t", preds=(Pred("orderkey", ">=", int(a)), Pred("orderkey", "<", int(b))))
+        for a, b in zip(edges[:-1], edges[1:])
+    ]
+    fd = FD("r", "orderkey", "suppkey")
+    rows = []
+    for frac in fracs:
+        clean = ssb_lineorder(N, 512, 64, seed=11)
+        ds = inject_fd_errors(clean, "orderkey", "suppkey", frac, 0.3, 64, seed=12)
+        rel = make_relation(ds.data, overlay=["orderkey", "suppkey"], k=8, rules=["r"])
+        t_d = run_daisy(rel, [fd], qs, DaisyConfig(expected_queries=nq))
+        rel = make_relation(ds.data, overlay=["orderkey", "suppkey"], k=8, rules=["r"])
+        t_o = run_offline(rel, [fd], qs)
+        rows.append([frac, round(t_d, 3), round(t_o, 3)])
+        print(f"fig11 frac={frac}: daisy {t_d:.2f}s offline {t_o:.2f}s")
+    return write_csv("fig11", ["error_frac", "daisy_s", "offline_s"], rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,103 @@
+"""Fig. 13/14/15 — join workloads: plain joins, mixed SP+join with the
+cost-model switch, and multi-join + group-by complex queries."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import write_csv
+from repro.core.constraints import FD
+from repro.core.executor import Daisy, DaisyConfig
+from repro.core.offline import OfflineCleaner
+from repro.core.operators import GroupBySpec, JoinClause, Pred, Query
+from repro.core.relation import make_relation
+from repro.data.generators import inject_fd_errors, ssb_lineorder, suppliers
+
+N = 2048
+N_SUP = 64
+
+
+def build_db(seed: int = 31):
+    lo = ssb_lineorder(N, 256, N_SUP, seed=seed)
+    ds_lo = inject_fd_errors(lo, "orderkey", "suppkey", 1.0, 0.1, N_SUP, seed=seed + 1)
+    sup = suppliers(N_SUP, seed=seed + 2)
+    ds_sup = inject_fd_errors(sup, "address", "suppkey", 1.0, 0.1, N_SUP, seed=seed + 3)
+    db = {
+        "lineorder": make_relation(
+            ds_lo.data, overlay=["orderkey", "suppkey"], k=8, rules=["phi"]
+        ),
+        "suppliers": make_relation(
+            ds_sup.data, overlay=["address", "suppkey"], k=8, rules=["psi"]
+        ),
+    }
+    rules = {
+        "lineorder": [FD("phi", "orderkey", "suppkey")],
+        "suppliers": [FD("psi", "address", "suppkey")],
+    }
+    return db, rules
+
+
+def join_queries(nq: int):
+    edges = np.linspace(0, N_SUP, nq + 1).astype(int)
+    return [
+        Query(
+            "lineorder",
+            preds=(Pred("suppkey", ">=", int(a)), Pred("suppkey", "<", int(b))),
+            joins=(JoinClause("suppliers", "suppkey", "suppkey"),),
+        )
+        for a, b in zip(edges[:-1], edges[1:])
+    ]
+
+
+def run(quick: bool = False):
+    nq = 6 if quick else 20
+    cfg = DaisyConfig(join_capacity=16384, use_cost_model=False)
+    rows = []
+
+    qs = join_queries(nq)
+    db, rules = build_db()
+    daisy = Daisy(db, rules, cfg)
+    t0 = time.perf_counter()
+    for q in qs:
+        daisy.execute(q)
+    t_d = time.perf_counter() - t0
+
+    db, rules = build_db()
+    off = OfflineCleaner(db, rules, cfg)
+    t0 = time.perf_counter()
+    off.clean_all()
+    for q in qs:
+        off.execute(q)
+    t_o = time.perf_counter() - t0
+    rows.append(["join_only", round(t_d, 3), round(t_o, 3)])
+    print(f"fig13 joins: daisy {t_d:.2f}s offline {t_o:.2f}s")
+
+    # Fig. 15-style: join + group-by (Q2/Q3 analogue)
+    q_complex = Query(
+        "lineorder",
+        preds=(Pred("suppkey", ">=", 0),),
+        joins=(JoinClause("suppliers", "suppkey", "suppkey"),),
+        groupby=GroupBySpec(keys=("region",), agg="count", table="suppliers"),
+    )
+    db, rules = build_db()
+    daisy = Daisy(db, rules, cfg)
+    _, t_d2 = _timed(lambda: daisy.execute(q_complex))
+    db, rules = build_db()
+    off = OfflineCleaner(db, rules, cfg)
+    off.clean_all()
+    _, t_o2 = _timed(lambda: off.execute(q_complex))
+    rows.append(["join_groupby", round(t_d2, 3), round(t_o2, 3)])
+    print(f"fig15 join+groupby: daisy {t_d2:.2f}s offline(post-clean) {t_o2:.2f}s")
+    return write_csv("fig13", ["workload", "daisy_s", "offline_s"], rows)
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, time.perf_counter() - t0
+
+
+if __name__ == "__main__":
+    run()

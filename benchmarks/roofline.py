@@ -1,0 +1,87 @@
+"""Roofline report: assemble experiments/dryrun/*.json into the §Roofline
+table (per arch x shape x mesh: the three terms, dominant bottleneck,
+useful-FLOPs ratio, memory fit).
+
+    PYTHONPATH=src python -m benchmarks.roofline [--dir experiments/dryrun]
+                                                 [--md out.md]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+HBM_PER_CHIP = 16 * 2**30  # v5e
+
+
+def load(dir_: str) -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_row(r: Dict) -> List[str]:
+    rl = r["roofline"]
+    peak = r["memory"]["peak_bytes"]
+    fits = "Y" if peak <= HBM_PER_CHIP else f"over x{peak/HBM_PER_CHIP:.1f}"
+    return [
+        r["arch"],
+        r["shape"],
+        "x".join(str(v) for v in r["mesh"].values()),
+        f"{rl['compute_s']:.4f}",
+        f"{rl['memory_s']:.4f}",
+        f"{rl['collective_s']:.4f}",
+        rl["dominant"],
+        f"{rl['roofline_fraction']:.3f}",
+        f"{r.get('useful_flops_ratio', 0):.2f}",
+        f"{peak/2**30:.1f}",
+        fits,
+    ]
+
+
+HEADER = [
+    "arch", "shape", "mesh", "compute_s", "memory_s", "collective_s",
+    "dominant", "roofline_frac", "useful_flops", "peak_GiB", "fits_16G",
+]
+
+
+def run(quick: bool = False, dir_: str = "experiments/dryrun",
+        md_out: str | None = None):
+    recs = [r for r in load(dir_) if "roofline" in r]
+    if not recs:
+        print("no dry-run records found — run repro.launch.dryrun --all first")
+        return
+    recs.sort(key=lambda r: (r["arch"], r["shape"], len(r["mesh"])))
+    lines = ["| " + " | ".join(HEADER) + " |",
+             "|" + "---|" * len(HEADER)]
+    for r in recs:
+        lines.append("| " + " | ".join(fmt_row(r)) + " |")
+    table = "\n".join(lines)
+    print(table)
+    if md_out:
+        with open(md_out, "w") as f:
+            f.write(table + "\n")
+    # aggregates
+    doms = {}
+    for r in recs:
+        doms[r["roofline"]["dominant"]] = doms.get(r["roofline"]["dominant"], 0) + 1
+    print(f"\ncells: {len(recs)}  dominant-term distribution: {doms}")
+    worst = min(recs, key=lambda r: r["roofline"]["roofline_fraction"])
+    print(f"worst roofline fraction: {worst['arch']} x {worst['shape']} "
+          f"({worst['roofline']['roofline_fraction']:.3f})")
+    coll = max(recs, key=lambda r: r["roofline"]["collective_s"]
+               / max(r["roofline"]["bound_s"], 1e-12))
+    print(f"most collective-bound: {coll['arch']} x {coll['shape']}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--md", default=None)
+    args = ap.parse_args()
+    run(dir_=args.dir, md_out=args.md)

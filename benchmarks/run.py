@@ -1,0 +1,66 @@
+"""Benchmark orchestrator: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Default is the quick profile (CI-sized datasets); --full runs the
+paper-scale sweeps.  CSVs land in experiments/bench/.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (
+    fig07_orderkey_selectivity,
+    fig08_suppkey_selectivity,
+    fig09_cost_model_switch,
+    fig10_multi_rule,
+    fig11_violation_scaling,
+    fig12_dc_inequality,
+    fig13_join_queries,
+    table5_accuracy,
+    table8_exploratory,
+)
+
+MODULES = [
+    ("fig07", fig07_orderkey_selectivity),
+    ("fig08", fig08_suppkey_selectivity),
+    ("fig09", fig09_cost_model_switch),
+    ("fig10", fig10_multi_rule),
+    ("fig11", fig11_violation_scaling),
+    ("fig12", fig12_dc_inequality),
+    ("fig13", fig13_join_queries),
+    ("table5", table5_accuracy),
+    ("table8", table8_exploratory),
+]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    quick = not args.full
+    failures = 0
+    for name, mod in MODULES:
+        if args.only and args.only != name:
+            continue
+        print(f"=== {name} ===")
+        t0 = time.time()
+        try:
+            mod.run(quick=quick)
+            print(f"--- {name} done in {time.time()-t0:.1f}s\n")
+        except Exception:
+            failures += 1
+            print(f"!!! {name} FAILED")
+            traceback.print_exc()
+    if failures:
+        sys.exit(f"{failures} benchmarks failed")
+    print("all benchmarks complete")
+
+
+if __name__ == "__main__":
+    main()

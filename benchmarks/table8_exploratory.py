@@ -1,0 +1,72 @@
+"""Table 8 — exploratory analysis scenarios: Nestle-style (category queries
+over material->category FD, tiny rhs cardinality) and the training-corpus
+metadata pipeline (the framework's own Daisy-in-the-loop use)."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import write_csv
+from repro.core.constraints import FD
+from repro.core.executor import Daisy, DaisyConfig
+from repro.core.offline import OfflineCleaner
+from repro.core.operators import Pred, Query
+from repro.core.relation import make_relation
+from repro.data.generators import inject_fd_errors
+from repro.data.pipeline import PipelineConfig, default_pipeline
+
+
+def nestle_like(n: int = 4096, seed: int = 41):
+    rng = np.random.default_rng(seed)
+    n_mat = 256
+    material = rng.integers(0, n_mat, n).astype(np.int32)
+    cat_of_mat = rng.integers(0, 8, n_mat).astype(np.int32)  # tiny rhs card
+    data = {
+        "material": material,
+        "category": cat_of_mat[material],
+        "price": rng.uniform(1, 50, n).astype(np.float32),
+    }
+    return inject_fd_errors(data, "material", "category", 1.0, 0.1, 8, seed=seed + 1)
+
+
+def run(quick: bool = False):
+    rows = []
+    nq = 8 if quick else 37
+    ds = nestle_like()
+    fd = FD("mc", "material", "category")
+    qs = [Query("t", preds=(Pred("category", "==", i % 8),)) for i in range(nq)]
+    rel = make_relation(ds.data, overlay=["material", "category"], k=8, rules=["mc"])
+    daisy = Daisy({"t": rel}, {"t": [fd]}, DaisyConfig(expected_queries=nq))
+    t0 = time.perf_counter()
+    for q in qs:
+        daisy.execute(q)
+    t_d = time.perf_counter() - t0
+    rel = make_relation(ds.data, overlay=["material", "category"], k=8, rules=["mc"])
+    off = OfflineCleaner({"t": rel}, {"t": [fd]})
+    t0 = time.perf_counter()
+    off.clean_all()
+    for q in qs:
+        off.execute(q)
+    t_o = time.perf_counter() - t0
+    rows.append(["nestle_like", round(t_d, 3), round(t_o, 3)])
+    print(f"table8 nestle: daisy {t_d:.2f}s offline {t_o:.2f}s")
+
+    # corpus-metadata pipeline scenario (the paper's technique inside the
+    # training data plane)
+    pipe, workload = default_pipeline(
+        n_docs=1024, cfg=PipelineConfig(batch_docs=8, seq_len=64)
+    )
+    t0 = time.perf_counter()
+    for batch in pipe.batches(workload, steps=8 if quick else 16):
+        pass
+    t_p = time.perf_counter() - t0
+    prog = pipe.cleaning_progress()
+    rows.append(["corpus_pipeline", round(t_p, 3), ""])
+    print(f"table8 corpus pipeline: {t_p:.2f}s, cleaned: {prog}")
+    return write_csv("table8", ["scenario", "daisy_s", "offline_s"], rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,35 @@
+"""Serve a small model with continuous batching (vLLM-style slots).
+
+Run:  PYTHONPATH=src python examples/serve_batched.py
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.params import init_params
+from repro.serve.engine import Request, ServeEngine
+
+cfg = get_config("gemma3-12b", reduced=True).canonicalize(tp=1)
+params = init_params(jax.random.key(1), cfg)
+engine = ServeEngine(cfg, params, max_batch=4, max_seq=96)
+
+rng = np.random.default_rng(7)
+requests = []
+for rid in range(8):  # 8 requests through 4 slots -> continuous batching
+    prompt = rng.integers(0, cfg.vocab_size, int(rng.integers(4, 10)))
+    req = Request(rid=rid, prompt=prompt.astype(np.int32), max_new=12)
+    requests.append(req)
+    engine.submit(req)
+
+t0 = time.time()
+engine.run()
+dt = time.time() - t0
+done = sum(r.done for r in requests)
+toks = sum(len(r.out) for r in requests)
+print(f"completed {done}/8 requests, {toks} new tokens in {dt:.1f}s")
+for r in requests[:4]:
+    print(f"  req {r.rid}: {len(r.prompt)}-token prompt -> {r.out}")
+assert done == 8

@@ -1,0 +1,49 @@
+"""End-to-end driver: train a small LM whose data pipeline cleans itself.
+
+Every batch request is a metadata query ("docs in language L with quality
+>= q"); Daisy's cleaning operators run inside the query plan, so label
+errors (FD source -> language violations) are repaired on-demand while the
+model trains — the paper's query-driven regime with the training loop as
+the workload.
+
+Run:  PYTHONPATH=src python examples/train_clean_pipeline.py  (~2 min CPU)
+"""
+
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.data.pipeline import PipelineConfig, default_pipeline
+from repro.models.params import init_params
+from repro.train.optim import OptConfig, init_opt_state
+from repro.train.steps import make_train_step
+
+STEPS = 60
+
+cfg = get_config("qwen3-4b", reduced=True).canonicalize(tp=1)
+pipe, workload = default_pipeline(
+    n_docs=512,
+    cfg=PipelineConfig(batch_docs=8, seq_len=64, vocab_size=512),
+)
+
+params = init_params(jax.random.key(0), cfg)
+opt_cfg = OptConfig(lr=1e-3, total_steps=STEPS, warmup_steps=10)
+opt = init_opt_state(params, opt_cfg)
+step = jax.jit(make_train_step(cfg, opt_cfg, n_micro=1, mamba_chunk=32),
+               donate_argnums=(0, 1))
+
+t0 = time.time()
+losses = []
+for i, batch in enumerate(pipe.batches(workload, STEPS)):
+    params, opt, metrics = step(params, opt, batch)
+    losses.append(float(metrics["loss"]))
+    if i % 10 == 0:
+        print(f"step {i:3d}  loss {losses[-1]:.3f}  "
+              f"cleaned {pipe.cleaning_progress()}")
+
+print(f"\n{STEPS} steps in {time.time()-t0:.1f}s")
+print(f"loss {losses[0]:.3f} -> {losses[-1]:.3f} (should decrease)")
+print(f"metadata cleaning progress: {pipe.cleaning_progress()}")
+print(f"queries executed by the pipeline: {pipe.queries_run}")
+assert losses[-1] < losses[0], "training failed to reduce loss"

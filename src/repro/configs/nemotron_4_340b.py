@@ -1,0 +1,46 @@
+"""nemotron-4-340b [dense] — GQA + squared-ReLU MLP.
+
+96L d_model=18432 96H (GQA kv=8) d_ff=73728 vocab=256000  [arXiv:2402.16819]
+
+Optimizer state in bf16: fp32 AdamW for 340B params cannot fit a single
+256-chip v5e pod (340e9 x 12 B / 256 = 16 GB/chip before activations);
+bf16 m/v + fp32 master = 10.6 GB/chip (see DESIGN.md hardware notes).
+"""
+
+from repro.models.config import BlockSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="nemotron-4-340b",
+    n_layers=96,
+    d_model=18432,
+    n_heads=96,
+    n_kv_heads=8,
+    d_ff=73728,
+    vocab_size=256000,
+    mlp="sq_relu",
+    norm="layernorm",
+    rope="standard",
+    pattern=(BlockSpec(),),
+    tie_embeddings=False,
+    # 340B on one 256-chip pod: bf16 master + Adafactor (DESIGN.md §2)
+    param_dtype="bfloat16",
+    optimizer="adafactor",
+)
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="nemotron-reduced",
+        n_layers=4,
+        d_model=96,
+        n_heads=6,
+        n_kv_heads=2,
+        d_ff=384,
+        vocab_size=512,
+        mlp="sq_relu",
+        norm="layernorm",
+        rope="standard",
+        pattern=(BlockSpec(),),
+        tie_embeddings=False,
+        remat=False,
+    )

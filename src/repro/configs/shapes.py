@@ -1,0 +1,102 @@
+"""Assigned input shapes and per-(arch x shape) cell definitions.
+
+Four shapes per LM architecture (assignment sheet):
+
+    train_4k     seq=4,096   global_batch=256   lowers train_step
+    prefill_32k  seq=32,768  global_batch=32    lowers prefill
+    decode_32k   seq=32,768  global_batch=128   lowers serve_step (1 token,
+                                                 KV cache of seq_len)
+    long_500k    seq=524,288 global_batch=1     serve_step; SUB-QUADRATIC
+                                                 archs only (ssm / hybrid /
+                                                 mostly-local) — skips are
+                                                 recorded in DESIGN.md
+
+``input_specs`` returns ShapeDtypeStructs only — nothing is allocated; the
+dry-run lowers against them (the shannon/kernels pattern).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models.config import ModelConfig
+from repro.models.transformer import init_cache
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # 'train' | 'prefill' | 'decode'
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+# per-arch training memory knobs: microbatches for train_4k (grad-accum
+# steps inside the train step) and the mamba scan chunk length.
+TRAIN_MICROBATCHES: Dict[str, int] = {
+    "jamba-1.5-large-398b": 16,
+    "falcon-mamba-7b": 16,
+    "nemotron-4-340b": 16,
+    "gemma3-12b": 8,
+    "chatglm3-6b": 8,
+    "qwen3-4b": 8,
+    "whisper-large-v3": 4,
+    "internvl2-26b": 16,
+    "olmoe-1b-7b": 8,
+    "qwen2-moe-a2.7b": 8,
+}
+
+MAMBA_CHUNK = 256
+
+
+def cell_applicable(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[bool, str]:
+    """Whether (arch, shape) is a valid assignment cell."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "long_500k skipped: pure full-attention arch (O(s^2))"
+    return True, ""
+
+
+def all_cells() -> List[Tuple[str, str]]:
+    cells = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            ok, _ = cell_applicable(cfg, shape)
+            if ok:
+                cells.append((cfg.name, shape.name))
+    return cells
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict:
+    """ShapeDtypeStruct stand-ins for every model input of the cell."""
+    b, s = shape.global_batch, shape.seq_len
+    d = cfg.d_model
+    if shape.kind in ("train", "prefill"):
+        s_text = s - cfg.vis_tokens if cfg.frontend == "vision" else s
+        batch = {"tokens": _sds((b, s_text), jnp.int32)}
+        if cfg.frontend == "vision":
+            batch["patch_embeds"] = _sds((b, cfg.vis_tokens, d), jnp.bfloat16)
+        if cfg.frontend == "audio":
+            batch["enc_frames"] = _sds((b, cfg.enc_seq, d), jnp.bfloat16)
+        if shape.kind == "train":
+            batch["labels"] = _sds((b, s_text), jnp.int32)
+        return batch
+    # decode: one new token + cache of seq_len
+    cache = jax.eval_shape(lambda: init_cache(cfg, b, s, jnp.bfloat16))
+    return {"token": _sds((b, 1), jnp.int32), "cache": cache}

@@ -1,0 +1,48 @@
+"""Daisy core: query-driven denial-constraint cleaning (the paper's contribution).
+
+Public API re-exports.
+"""
+
+from repro.core.accuracy import Accuracy, repair_accuracy
+from repro.core.constraints import DC, FD, Atom, fd_as_dc, overlaps_query
+from repro.core.cost import CostModel
+from repro.core.detect import detect_dc, detect_fd
+from repro.core.executor import Daisy, DaisyConfig, DaisyResult
+from repro.core.offline import OfflineCleaner
+from repro.core.operators import GroupBySpec, JoinClause, Pred, Query, filter_mask
+from repro.core.planner import plan_query
+from repro.core.relation import Dictionary, Relation, make_relation
+from repro.core.relax import relax_fd
+from repro.core.repair import repaired_value
+from repro.core.update import apply_candidates, mark_checked, unchecked
+
+__all__ = [
+    "Accuracy",
+    "Atom",
+    "CostModel",
+    "DC",
+    "Daisy",
+    "DaisyConfig",
+    "DaisyResult",
+    "Dictionary",
+    "FD",
+    "GroupBySpec",
+    "JoinClause",
+    "OfflineCleaner",
+    "Pred",
+    "Query",
+    "Relation",
+    "apply_candidates",
+    "detect_dc",
+    "detect_fd",
+    "fd_as_dc",
+    "filter_mask",
+    "make_relation",
+    "mark_checked",
+    "overlaps_query",
+    "plan_query",
+    "relax_fd",
+    "repair_accuracy",
+    "repaired_value",
+    "unchecked",
+]

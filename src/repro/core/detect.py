@@ -1,0 +1,125 @@
+"""Violation detection (paper §4.1 FDs, §4.2 general DCs).
+
+FD detection is the BigDansing-style group-by (no self-join): sort rows by
+(lhs, rhs), a group violates iff it contains >= 2 distinct rhs values.  The
+same pass yields the per-group distinct (value, frequency) table — exactly
+the numerators of the candidate probabilities P(rhs | lhs), so detection and
+candidate computation share one sort (the paper's "relaxation benefit":
+candidates come from the correlated tuples, not from dataset re-scans).
+
+DC detection is the partitioned theta-join (Okcan-Riedewald matrix): every
+ordered pair (t1, t2) with all atoms true is a violation.  The pairwise scan
+is the paper's compute hot-spot and runs in the Pallas ``dc_pairs`` kernel
+(blocked VMEM tiles + block-bound pruning, DESIGN.md §7); detection for the
+t2 role reuses the same kernel with flipped atoms, so both roles' statistics
+are row-indexed and accumulate TPU-grid-friendly.
+
+Scopes: ``row_scope`` is the paper's "query result (+ extra)" side and
+``col_scope`` the "rest of the dataset" side — incremental cleaning shrinks
+these masks instead of re-partitioning a matrix.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.constraints import DC, FD, flip_op
+from repro.core.relation import Relation
+from repro.core.setops import group_distinct_candidates
+from repro.kernels import ops as kops
+
+
+class FDDetectResult(NamedTuple):
+    violated: jnp.ndarray  # (cap,) bool — row belongs to a violating group
+    rhs_cand: jnp.ndarray  # (cap, K) candidate rhs values (group-distinct)
+    rhs_count: jnp.ndarray  # (cap, K) frequency of each candidate
+    lhs_cand: jnp.ndarray | None  # (cap, K) candidate lhs values (1-attr lhs)
+    lhs_count: jnp.ndarray | None
+    overflow: jnp.ndarray  # () bool — >K distinct candidates somewhere
+
+
+def detect_fd(
+    rel: Relation, fd: FD, scope: jnp.ndarray, k: int | None = None
+) -> FDDetectResult:
+    """Detect FD violations among rows in ``scope``; compute candidates.
+
+    Candidate rhs values for a row = distinct rhs values of scope rows
+    sharing its lhs (with frequencies).  When the lhs is a single attribute,
+    candidate lhs values (P(lhs | rhs), paper Example 2) are computed by the
+    swapped grouping.
+    """
+    k = k or max(rel.k, 2)
+    scope = scope & rel.valid
+    lhs_cols = [rel.columns[a] for a in fd.lhs]
+    rhs_col = rel.columns[fd.rhs]
+    rhs_cand, rhs_count, violated, overflow = group_distinct_candidates(
+        lhs_cols, rhs_col, scope, k
+    )
+    lhs_cand = lhs_count = None
+    if len(fd.lhs) == 1:
+        lhs_cand, lhs_count, _, ovf2 = group_distinct_candidates(
+            [rhs_col], lhs_cols[0], scope, k
+        )
+        overflow = overflow | ovf2
+    return FDDetectResult(violated, rhs_cand, rhs_count, lhs_cand, lhs_count, overflow)
+
+
+class DCDetectResult(NamedTuple):
+    """Per-row DC violation statistics for both tuple roles.
+
+    ``t1_count[i]``: number of partners t2 with all atoms (t1=i) true.
+    ``t1_stat[a][i]``: extremal partner value of atom ``a``'s rhs attribute
+    over i's violating partners — the bound of the candidate range fix
+    (paper Example 4: fix for t1 under ``t1.x < t2.x`` is ``x > max t2.x``).
+    ``t2_*``: same with i in the t2 role.
+    """
+
+    t1_count: jnp.ndarray  # (cap,) int32
+    t2_count: jnp.ndarray  # (cap,) int32
+    t1_stat: Tuple[jnp.ndarray, ...]  # n_atoms x (cap,)
+    t2_stat: Tuple[jnp.ndarray, ...]  # n_atoms x (cap,)
+
+
+# For a violating atom ``t1.l op t2.r``:
+#  * the t1-side fix must make ``t1.l inv(op) t2.r`` hold for ALL partners ->
+#    bound is the max (for op in {<,<=}) or min (for {>,>=}) of partner r.
+#  * the t2-side fix bound is the min/max of partner l symmetrically.
+_T1_REDUCE = {"<": "max", "<=": "max", ">": "min", ">=": "min", "==": "min", "!=": "min"}
+
+
+def detect_dc(
+    rel: Relation,
+    dc: DC,
+    row_scope: jnp.ndarray,
+    col_scope: jnp.ndarray,
+    block: int = 256,
+) -> DCDetectResult:
+    """Detect DC violations between ``row_scope`` rows (role t1) and
+    ``col_scope`` rows (role t2), both directions.
+    """
+    row_scope = row_scope & rel.valid
+    col_scope = col_scope & rel.valid
+    l_cols = [rel.columns[a.left] for a in dc.atoms]
+    r_cols = [rel.columns[a.right] for a in dc.atoms]
+    ops = [a.op for a in dc.atoms]
+    reduces = [_T1_REDUCE[op] for op in ops]
+
+    # role t1: rows are t1, partners t2 in col_scope; stat over partner r.
+    t1_count, t1_stat = kops.dc_role_scan(
+        l_cols, r_cols, ops, row_scope, col_scope, reduces, block=block
+    )
+    # role t2: rows are t2 — atom becomes row.r flip(op) col.l; stat over
+    # partner l with the same reduce orientation seen from the row's side.
+    flipped = [flip_op(op) for op in ops]
+    t2_reduces = [_T1_REDUCE[op] for op in flipped]
+    t2_count, t2_stat = kops.dc_role_scan(
+        r_cols, l_cols, flipped, row_scope, col_scope, t2_reduces, block=block
+    )
+    return DCDetectResult(t1_count, t2_count, tuple(t1_stat), tuple(t2_stat))
+
+
+def dc_violation_count(result: DCDetectResult) -> jnp.ndarray:
+    """Total number of violating ordered pairs (each counted once)."""
+    return jnp.sum(result.t1_count)

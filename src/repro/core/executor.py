@@ -1,0 +1,466 @@
+"""Daisy executor: query processing woven with cleaning operators (§4-§6).
+
+``Daisy.execute(query)`` runs the cleaning-aware plan:
+
+1. the planner injects a cleaning step per overlapping rule (planner.py);
+2. ``clean_sigma`` steps relax the (dirty) answer, detect violations over the
+   correlated cluster, merge probabilistic repairs, and flag the cluster
+   checked;
+3. the final answer is recomputed over the now-probabilistic relation with
+   possible-world semantics (a tuple qualifies iff >= 1 candidate does);
+4. joins run as base-join + incremental join of the relaxation extras
+   (Fig. 5), are deduped, keep lineage, and are re-checked (Def. 3 (d) —
+   Lemma 5 says the re-check finds nothing; we count to prove it);
+5. per-rule online cost models (Inequality (1)) accumulate the observed
+   work and flip the strategy to full cleaning mid-workload (Figs. 9/14);
+   DC rules consult Algorithm 2's accuracy estimate instead.
+
+The executor owns the database state: every query returns a result AND
+advances the gradually-cleaned probabilistic instance (§6).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import stats as statsmod
+from repro.core.constraints import DC, FD
+from repro.core.cost import CostModel
+from repro.core.detect import detect_dc, detect_fd
+from repro.core.operators import (
+    GroupBySpec,
+    JoinState,
+    Pred,
+    Query,
+    dedupe_pairs,
+    expected_value,
+    filter_mask,
+    key_candidates,
+    prob_equijoin,
+    _finalize_groupby,
+)
+from repro.core.planner import CleanStep, PlanInfo, plan_query
+from repro.core.relax import relax_fd
+from repro.core.relation import CAND_VALUE, Relation
+from repro.core.repair import dc_repair_candidates, fd_repair_candidates
+from repro.core.update import apply_candidates, mark_checked, unchecked
+
+
+@dataclasses.dataclass
+class DaisyConfig:
+    k: int = 8
+    join_capacity: int = 8192
+    join_row_block: int = 2048
+    dc_partitions: int = 16
+    dc_block: int = 256
+    accuracy_threshold: float = 0.5
+    expected_queries: int = 50
+    use_cost_model: bool = True
+    collect_stats: bool = True
+    max_relax_iters: Optional[int] = None
+    lemma1_fast_path: bool = False
+
+
+@dataclasses.dataclass
+class StepReport:
+    rule: str
+    table: str
+    mode: str  # incremental | full | skipped
+    answer_size: int = 0
+    extra: int = 0
+    repaired: int = 0
+    relax_iterations: int = 0
+    relax_converged: bool = True
+    alg2_accuracy: float = 1.0
+    alg2_support: float = 0.0
+
+
+@dataclasses.dataclass
+class ExecReport:
+    steps: List[StepReport] = dataclasses.field(default_factory=list)
+    notes: List[str] = dataclasses.field(default_factory=list)
+    result_size: int = 0
+    recheck_violations: int = 0
+    join_overflow: bool = False
+
+
+@dataclasses.dataclass
+class DaisyResult:
+    mask: Optional[jnp.ndarray] = None  # SP result (mask over base table)
+    join: Optional[JoinState] = None  # join lineage
+    groups: Optional[Dict[str, jnp.ndarray]] = None  # group-by output
+    report: ExecReport = dataclasses.field(default_factory=ExecReport)
+
+
+class Daisy:
+    """Query-driven cleaning engine (the system of §6, JAX-native)."""
+
+    def __init__(
+        self,
+        db: Dict[str, Relation],
+        rules: Dict[str, Sequence[FD | DC]],
+        config: DaisyConfig | None = None,
+    ):
+        self.db = dict(db)
+        self.rules = {t: list(rs) for t, rs in rules.items()}
+        self.config = config or DaisyConfig()
+        self.stats: Dict[Tuple[str, str], object] = {}
+        self.cost: Dict[Tuple[str, str], CostModel] = {}
+        self.checked_partitions: Dict[Tuple[str, str], int] = {}
+        if self.config.collect_stats:
+            self._collect_stats()
+
+    # ------------------------------------------------------------ statistics
+    def _collect_stats(self) -> None:
+        """Precompute per-(table, rule) statistics (§5.2.3, §7/Fig 11)."""
+        for table, rules in self.rules.items():
+            rel = self.db[table]
+            n = int(np.asarray(rel.num_rows()))
+            for rule in rules:
+                key = (table, rule.name)
+                if isinstance(rule, FD):
+                    st = statsmod.fd_stats(rel, rule)
+                    df = float(n)  # hash/sort group-by detection cost
+                    self.stats[key] = st
+                    self.cost[key] = CostModel(
+                        n=n,
+                        epsilon=st.epsilon,
+                        p=st.p_est,
+                        df=df,
+                        expected_queries=self.config.expected_queries,
+                    )
+                else:
+                    st = statsmod.dc_stats(rel, rule, p=self.config.dc_partitions)
+                    df = n * n / max(self.config.dc_partitions, 1)
+                    self.stats[key] = st
+                    self.cost[key] = CostModel(
+                        n=n,
+                        epsilon=int(st.range_vio.sum()),
+                        p=2.0,
+                        df=df,
+                        expected_queries=self.config.expected_queries,
+                    )
+                self.checked_partitions[key] = 0
+
+    # -------------------------------------------------------------- planning
+    def _want_full(self) -> Dict[Tuple[str, str], bool]:
+        if not self.config.use_cost_model:
+            return {}
+        return {key: cm.should_switch_to_full() for key, cm in self.cost.items()}
+
+    # ------------------------------------------------------------- FD steps
+    def _clean_fd(
+        self, step: CleanStep, report: ExecReport
+    ) -> None:
+        table, fd = step.table, step.rule
+        rel = self.db[table]
+        cm = self.cost.get((table, fd.name))
+        st = self.stats.get((table, fd.name))
+        rep = StepReport(fd.name, table, step.mode)
+
+        if step.mode == "full":
+            scope = rel.valid
+            rep.answer_size = int(np.asarray(jnp.sum(scope)))
+        else:
+            answer = filter_mask(rel, step.preds)
+            rep.answer_size = int(np.asarray(jnp.sum(answer)))
+            # Fig. 11 skip: answer touches no dirty group and nothing unchecked
+            if st is not None:
+                dirty_hit = bool(
+                    np.asarray(
+                        jnp.any(answer & jnp.asarray(st.dirty_row) & unchecked(rel, fd.name))
+                    )
+                )
+                if not dirty_hit:
+                    rep.mode = "skipped"
+                    report.steps.append(rep)
+                    if cm:
+                        cm.record(rep.answer_size, 0, 0.0, 0)
+                    return
+            res = relax_fd(
+                rel,
+                answer,
+                fd,
+                max_iters=self.config.max_relax_iters,
+                use_rhs=step.use_rhs,
+            )
+            scope = answer | res.extra
+            rep.extra = int(np.asarray(jnp.sum(res.extra)))
+            rep.relax_iterations = int(np.asarray(res.iterations))
+            rep.relax_converged = bool(np.asarray(res.converged))
+
+        repair_scope = scope & unchecked(rel, fd.name)
+        if not bool(np.asarray(jnp.any(repair_scope))):
+            # everything in scope already checked for this rule (e.g. the
+            # post-clean query phase of the offline baseline) — skip the
+            # detection/repair/merge entirely.
+            rep.mode = "skipped"
+            report.steps.append(rep)
+            if cm:
+                cm.record(rep.answer_size, rep.extra, 0.0, 0)
+            return
+        det = detect_fd(rel, fd, scope, k=self.config.k)
+        deltas = fd_repair_candidates(rel, fd, det, repair_scope)
+        rep.repaired = int(np.asarray(jnp.sum(det.violated & repair_scope)))
+        rel = apply_candidates(rel, deltas)
+        rel = mark_checked(rel, fd.name, scope)
+        self.db[table] = rel
+        if cm:
+            d_i = float(np.asarray(jnp.sum(scope)))
+            cm.record(rep.answer_size, rep.extra, d_i, rep.repaired)
+            if step.mode == "full":
+                cm.mark_switched()
+        report.steps.append(rep)
+
+    # ------------------------------------------------------------- DC steps
+    def _clean_dc(self, step: CleanStep, report: ExecReport) -> None:
+        table, dc = step.table, step.rule
+        rel = self.db[table]
+        key = (table, dc.name)
+        cm = self.cost.get(key)
+        st: statsmod.DCStats = self.stats.get(key)
+        rep = StepReport(dc.name, table, step.mode)
+
+        answer = filter_mask(rel, step.preds) if step.preds else rel.valid
+        rep.answer_size = int(np.asarray(jnp.sum(answer)))
+        mode = step.mode
+        if mode == "auto" and st is not None:
+            pivot_vals = np.asarray(rel.columns[st.pivot])[np.asarray(answer)]
+            dec = statsmod.algorithm2_decide(
+                st,
+                pivot_vals,
+                rep.answer_size,
+                self.checked_partitions.get(key, 0),
+                self.config.accuracy_threshold,
+            )
+            rep.alg2_accuracy = dec.accuracy
+            rep.alg2_support = dec.support
+            mode = "full" if dec.full_clean else "incremental"
+        elif mode == "auto":
+            mode = "incremental"
+        rep.mode = mode
+
+        if mode == "full":
+            row_scope = rel.valid
+            col_scope = rel.valid
+        else:
+            row_scope = answer & unchecked(rel, dc.name)
+            col_scope = rel.valid
+
+        det = detect_dc(rel, dc, row_scope, col_scope, block=self.config.dc_block)
+        deltas = dc_repair_candidates(rel, dc, det, row_scope, k=self.config.k)
+        repaired = (det.t1_count > 0) | (det.t2_count > 0)
+        rep.repaired = int(np.asarray(jnp.sum(repaired & row_scope)))
+        rel = apply_candidates(rel, deltas)
+
+        if mode == "incremental":
+            # partners of the answer (the DC-correlated tuples, §4.2) get their
+            # role fixes too — the incremental matrix strip [rest x answer].
+            partner_scope = rel.valid & ~answer
+            det2 = detect_dc(rel, dc, partner_scope, answer, block=self.config.dc_block)
+            deltas2 = dc_repair_candidates(rel, dc, det2, partner_scope, k=self.config.k)
+            rel = apply_candidates(rel, deltas2)
+            rep.extra = int(
+                np.asarray(jnp.sum(((det2.t1_count > 0) | (det2.t2_count > 0)) & partner_scope))
+            )
+
+        rel = mark_checked(rel, dc.name, row_scope if mode != "full" else rel.valid)
+        self.db[table] = rel
+        # support bookkeeping: diagonal partitions covered by this query
+        p = self.config.dc_partitions
+        sq = int(math.isqrt(p))
+        covered = sq if mode != "full" else sq * (sq + 1) // 2
+        self.checked_partitions[key] = self.checked_partitions.get(key, 0) + covered
+        if cm:
+            n = cm.n
+            d_i = float(rep.answer_size) * n / max(p, 1) if mode != "full" else cm.df
+            cm.record(rep.answer_size, rep.extra, d_i, rep.repaired)
+            if mode == "full":
+                cm.mark_switched()
+        report.steps.append(rep)
+
+    # ------------------------------------------------------------ execution
+    def _run_steps(self, plan: PlanInfo, report: ExecReport) -> None:
+        for step in plan.steps:
+            if isinstance(step.rule, FD):
+                self._clean_fd(step, report)
+            else:
+                self._clean_dc(step, report)
+
+    def execute(self, query: Query) -> DaisyResult:
+        plan = plan_query(
+            query, self.rules, self._want_full(),
+            lemma1_fast_path=self.config.lemma1_fast_path,
+        )
+        report = ExecReport(notes=list(plan.notes))
+
+        if not query.joins:
+            return self._execute_sp(query, plan, report)
+        return self._execute_join(query, plan, report)
+
+    # ----------------------------------------------------------- SP queries
+    def _execute_sp(self, query: Query, plan: PlanInfo, report: ExecReport) -> DaisyResult:
+        self._run_steps(plan, report)
+        rel = self.db[query.table]
+        mask = filter_mask(rel, query.preds)
+        report.result_size = int(np.asarray(jnp.sum(mask)))
+        result = DaisyResult(mask=mask, report=report)
+        if query.groupby is not None:
+            result.groups = self._groupby_sp(rel, mask, query.groupby)
+        return result
+
+    def _groupby_sp(self, rel: Relation, mask, spec: GroupBySpec):
+        from repro.core.operators import groupby_agg
+
+        return groupby_agg(rel, mask, spec)
+
+    # --------------------------------------------------------- join queries
+    def _execute_join(self, query: Query, plan: PlanInfo, report: ExecReport) -> DaisyResult:
+        cfg = self.config
+        # pre-clean qualifying masks (the dirty base join inputs)
+        pre_masks: Dict[str, jnp.ndarray] = {
+            query.table: filter_mask(self.db[query.table], query.preds)
+        }
+        for j in query.joins:
+            pre_masks[j.right] = filter_mask(self.db[j.right], j.right_preds)
+
+        # clean each side's qualifying part (push-down, §5.1)
+        self._run_steps(plan, report)
+
+        post_masks: Dict[str, jnp.ndarray] = {
+            query.table: filter_mask(self.db[query.table], query.preds)
+        }
+        for j in query.joins:
+            post_masks[j.right] = filter_mask(self.db[j.right], j.right_preds)
+
+        state: Optional[JoinState] = None
+        for j in query.joins:
+            state = self._join_once(query, state, j, pre_masks, post_masks, report)
+        report.result_size = int(np.asarray(jnp.sum(state.valid)))
+        report.recheck_violations = self._recheck(state)
+        result = DaisyResult(join=state, report=report)
+        if query.groupby is not None:
+            result.groups = self._groupby_join(state, query.groupby)
+        return result
+
+    def _key_source(self, state: Optional[JoinState], base: str, col: str) -> str:
+        """Which table provides ``col`` for the current join state."""
+        tables = [base] if state is None else list(state.tables)
+        for t in tables:
+            if col in self.db[t].columns:
+                return t
+        raise KeyError(f"join key {col!r} not found among {tables}")
+
+    def _join_once(
+        self,
+        query: Query,
+        state: Optional[JoinState],
+        j,
+        pre_masks,
+        post_masks,
+        report: ExecReport,
+    ) -> JoinState:
+        cfg = self.config
+        left_table = self._key_source(state, query.table, j.left_on)
+        rel_l = self.db[left_table]
+        rel_r = self.db[j.right]
+        kv_l, al_l = key_candidates(rel_l, j.left_on)
+        kv_r, al_r = key_candidates(rel_r, j.right_on)
+
+        if state is None:
+            pre_l, post_l = pre_masks[query.table], post_masks[query.table]
+            pre_r, post_r = pre_masks[j.right], post_masks[j.right]
+            # base join on the dirty qualifying parts
+            li, ri, v, ovf = prob_equijoin(
+                kv_l, al_l, pre_l, kv_r, al_r, pre_r,
+                cfg.join_capacity, cfg.join_row_block,
+            )
+            # incremental join of the relaxation extras (Fig. 5):
+            # extras_l x post_r, then pre_l x extras_r
+            extra_l = post_l & ~pre_l
+            extra_r = post_r & ~pre_r
+            li2, ri2, v2, ovf2 = prob_equijoin(
+                kv_l, al_l, extra_l, kv_r, al_r, post_r,
+                cfg.join_capacity, cfg.join_row_block,
+            )
+            li3, ri3, v3, ovf3 = prob_equijoin(
+                kv_l, al_l, pre_l, kv_r, al_r, extra_r,
+                cfg.join_capacity, cfg.join_row_block,
+            )
+            li = jnp.concatenate([li, li2, li3])
+            ri = jnp.concatenate([ri, ri2, ri3])
+            v = jnp.concatenate([v, v2, v3])
+            v = dedupe_pairs(li, ri, v)
+            # compact to capacity
+            order = jnp.argsort(~v, stable=True)[: cfg.join_capacity]
+            li, ri, v = li[order], ri[order], v[order]
+            overflow = ovf | ovf2 | ovf3
+            report.join_overflow = bool(np.asarray(overflow))
+            return JoinState(
+                tables=(left_table, j.right),
+                rows={left_table: li, j.right: ri},
+                valid=v,
+                overflow=overflow,
+            )
+
+        # chained join: gather current result's key candidates
+        rows_l = state.rows[left_table]
+        kv_res = kv_l[rows_l]
+        al_res = al_l[rows_l] & state.valid[:, None]
+        post_r = post_masks.get(j.right, self.db[j.right].valid)
+        li, ri, v, ovf = prob_equijoin(
+            kv_res, al_res, state.valid, kv_r, al_r, post_r,
+            cfg.join_capacity, cfg.join_row_block,
+        )
+        v = dedupe_pairs(li, ri, v)
+        new_rows = {
+            t: jnp.where(v, r[jnp.minimum(li, r.shape[0] - 1)], r.shape[0])
+            for t, r in state.rows.items()
+        }
+        new_rows[j.right] = jnp.where(v, ri, rel_r.capacity)
+        report.join_overflow = report.join_overflow or bool(np.asarray(ovf))
+        return JoinState(
+            tables=state.tables + (j.right,),
+            rows=new_rows,
+            valid=v,
+            overflow=state.overflow | ovf,
+        )
+
+    def _recheck(self, state: JoinState) -> int:
+        """Def. 3 (d): re-check the stitched join result for violations.
+        Lemma 5 predicts zero NEW violations among unchecked rows."""
+        total = 0
+        for table in state.tables:
+            rel = self.db[table]
+            used = jnp.zeros((rel.capacity,), bool).at[
+                jnp.where(state.valid, state.rows[table], rel.capacity)
+            ].set(True, mode="drop")
+            for rule in self.rules.get(table, ()):
+                if isinstance(rule, FD):
+                    det = detect_fd(rel, rule, used & rel.valid, k=self.config.k)
+                    fresh = det.violated & unchecked(rel, rule.name)
+                    total += int(np.asarray(jnp.sum(fresh)))
+        return total
+
+    def _groupby_join(self, state: JoinState, spec: GroupBySpec):
+        """Group-by over join lineage: gather key/value columns, aggregate
+        with expected-value semantics."""
+        table = spec.table or self._key_source(state, state.tables[0], spec.keys[0])
+        rel = self.db[table]
+        rows = state.rows[table]
+        safe = jnp.minimum(rows, rel.capacity - 1)
+        keys = [rel.columns[a][safe] for a in spec.keys]
+        w = state.valid.astype(jnp.float32)
+        if spec.value:
+            vt = spec.table or self._key_source(state, state.tables[0], spec.value)
+            vrel = self.db[vt]
+            vrows = jnp.minimum(state.rows[vt], vrel.capacity - 1)
+            v = expected_value(vrel, spec.value)[vrows]
+        else:
+            v = jnp.zeros_like(w)
+        return _finalize_groupby(spec, keys, state.valid, w, v)

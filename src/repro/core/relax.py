@@ -1,0 +1,136 @@
+"""Query result relaxation (paper §4.1, Algorithm 1).
+
+Given a query answer ``A`` (a boolean mask over the relation) and an FD
+``lhs -> rhs``, augment ``A`` with *correlated tuples*: unvisited tuples whose
+lhs key appears among the answer's lhs keys, or whose rhs value appears among
+the answer's rhs values.  Iterate to a transitive-closure fixpoint
+(Example 3: the closure walks lhs- and rhs-sharing chains).
+
+The pseudocode of Algorithm 1 keeps ``A`` fixed while draining ``unvisited``;
+the accompanying text and Example 3 make clear the intended semantics is the
+transitive closure ("Algorithm 1 determines the whole cluster of correlated
+entities"), so each iteration recomputes the frontier from ``A ∪ total_extra``.
+
+Faithfulness hooks:
+* Lemma 1 — a filter on the **rhs** converges after ONE iteration (the lhs
+  expansion already covers every candidate; the rhs expansion adds nothing).
+  ``relax_fd`` reports the iteration count so tests can assert this.
+* Lemma 2 — the probability that one more iteration is needed is estimated
+  with the hypergeometric expression (``lemma2_prob``).
+* Lemma 3 — ``lemma3_upper_bound`` computes the relaxed-size upper bound
+  from the dataset / result frequency distributions.
+
+TPU adaptation: masks instead of dynamic sets, ``lax.while_loop`` with a
+static ``max_iters`` bound (the closure's diameter is <= n, but every round
+at least doubles the reached cluster frontier through a shared value, so
+``ceil(log2(n)) + 2`` rounds suffice; we expose the bound and a converged
+flag).  Membership tests are exact sort-merge semijoins (``setops.member_in``)
+or the blocked Pallas ``semijoin`` kernel for single-column keys.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.constraints import FD
+from repro.core.relation import Relation
+from repro.core.setops import member_in
+
+
+class RelaxResult(NamedTuple):
+    extra: jnp.ndarray  # (cap,) bool — total_extra of Algorithm 1
+    iterations: jnp.ndarray  # () int32 — rounds until fixpoint
+    converged: jnp.ndarray  # () bool — fixpoint reached within max_iters
+
+
+def default_max_iters(capacity: int) -> int:
+    return int(math.ceil(math.log2(max(capacity, 2)))) + 2
+
+
+def relax_fd(
+    rel: Relation,
+    answer: jnp.ndarray,
+    fd: FD,
+    max_iters: int | None = None,
+    use_rhs: bool = True,
+) -> RelaxResult:
+    """Algorithm 1: compute the correlated extra tuples for ``answer``.
+
+    ``use_rhs=False`` restricts expansion to lhs-sharing only (used by the
+    planner when the filter is on the rhs — per Lemma 1 the rhs expansion is
+    provably empty, so skipping it saves a semijoin).
+    """
+    iters = max_iters or default_max_iters(rel.capacity)
+    lhs_cols = [rel.columns[a] for a in fd.lhs]
+    rhs_col = rel.columns[fd.rhs]
+    valid = rel.valid
+    answer = answer & valid
+
+    def body(state):
+        reached, unvisited, it, _changed = state
+        # line 6: unvisited tuples sharing an lhs key with the reached set
+        extra_l = member_in(lhs_cols, unvisited, lhs_cols, reached)
+        unvisited = unvisited & ~extra_l
+        reached = reached | extra_l
+        if use_rhs:
+            # line 8: unvisited tuples sharing an rhs value with the reached set
+            extra_r = member_in([rhs_col], unvisited, [rhs_col], reached)
+            unvisited = unvisited & ~extra_r
+            reached = reached | extra_r
+            changed = jnp.any(extra_l) | jnp.any(extra_r)
+        else:
+            changed = jnp.any(extra_l)
+        return reached, unvisited, it + 1, changed
+
+    def cond(state):
+        _, _, it, changed = state
+        return changed & (it < iters)
+
+    init = (answer, valid & ~answer, jnp.int32(0), jnp.bool_(True))
+    reached, unvisited, it, changed = jax.lax.while_loop(cond, body, init)
+    return RelaxResult(
+        extra=reached & ~answer,
+        iterations=it,
+        converged=~changed,
+    )
+
+
+def lemma2_prob(n: int, num_violations: int, relaxed_size: int) -> float:
+    """Lemma 2: P(>=1 violation inside a relaxed result of size |A_R|).
+
+    Hypergeometric: 1 - C(n - #vio, |A_R|) / C(n, |A_R|).
+    Computed in log-space to stay stable for large n.
+    """
+    n = int(n)
+    v = int(num_violations)
+    a = int(relaxed_size)
+    if v <= 0 or a <= 0:
+        return 0.0
+    if a > n - v:
+        return 1.0
+    log_p0 = (
+        math.lgamma(n - v + 1)
+        - math.lgamma(n - v - a + 1)
+        + math.lgamma(n - a + 1)
+        - math.lgamma(n + 1)
+    )
+    return 1.0 - math.exp(log_p0)
+
+
+def lemma3_upper_bound(
+    dataset_freq: Sequence[jnp.ndarray], result_freq: Sequence[jnp.ndarray]
+) -> jnp.ndarray:
+    """Lemma 3: upper bound on the relaxed result growth per iteration.
+
+    For each constraint attribute ``A_i``, ``dataset_freq[i]`` / ``result_freq[i]``
+    hold the dataset / result frequencies of the attribute's values that occur
+    in the result.  R = sum_i (sum_j D_ij - sum_j Dq_ij).
+    """
+    total = jnp.float32(0.0)
+    for d, q in zip(dataset_freq, result_freq):
+        total = total + jnp.sum(d) - jnp.sum(q)
+    return total

@@ -1,0 +1,133 @@
+"""Probabilistic repair (paper §4.1-§4.3).
+
+Turns detection results into candidate overlays:
+
+* **FD repair**: a violated cell's rhs candidates are the distinct rhs values
+  co-occurring with its lhs (frequency-weighted -> P(rhs|lhs)); symmetrically
+  lhs candidates from P(lhs|rhs) when the lhs is a single attribute.  Both
+  sides are kept, mirroring the paper's "two instances per tuple" candidate
+  pairs (Example 2 / Table 2b).
+* **DC repair** (Example 4): for each violated inequality atom the touched
+  attribute keeps its original value OR takes the open range inverting the
+  atom against *all* violating partners (bound = extremal partner value from
+  the theta-join scan).  Original and range fix get equal weight — Example
+  4's {<2000 50%, 3000 50%}.  Equality atoms contribute detection only; their
+  value fixes are the FD machinery's job (DESIGN.md §2 assumption (c)).
+
+Counts (not normalized probabilities) are stored so that the multi-rule merge
+is a plain union-sum — exactly commutative/associative (Lemma 4); probability
+normalization happens on read (``Relation.probs``).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.constraints import DC, FD
+from repro.core.detect import DCDetectResult, FDDetectResult
+from repro.core.relation import CAND_GT, CAND_LT, CAND_VALUE, Relation
+
+
+class Candidates(NamedTuple):
+    """Per-row candidate overlay delta for one attribute."""
+
+    values: jnp.ndarray  # (cap, K)
+    counts: jnp.ndarray  # (cap, K) float32; 0 == empty slot
+    kinds: jnp.ndarray  # (cap, K) int8
+    rows: jnp.ndarray  # (cap,) bool — rows the delta applies to
+
+
+def fd_repair_candidates(
+    rel: Relation, fd: FD, det: FDDetectResult, scope: jnp.ndarray
+) -> Tuple[Tuple[str, Candidates], ...]:
+    """Candidate deltas per attribute for FD violations inside ``scope``."""
+    rows = det.violated & scope & rel.valid
+    out = []
+    kinds = jnp.zeros(det.rhs_cand.shape, jnp.int8)
+    out.append((fd.rhs, Candidates(det.rhs_cand, det.rhs_count, kinds, rows)))
+    if det.lhs_cand is not None and len(fd.lhs) == 1:
+        lkinds = jnp.zeros(det.lhs_cand.shape, jnp.int8)
+        out.append(
+            (fd.lhs[0], Candidates(det.lhs_cand, det.lhs_count, lkinds, rows))
+        )
+    return tuple(out)
+
+
+# fix kind that inverts a violated atom ``row.x op partner.y`` for ALL partners
+_FIX_KIND = {"<": CAND_GT, "<=": CAND_GT, ">": CAND_LT, ">=": CAND_LT}
+
+
+def _role_candidates(
+    rel: Relation,
+    attrs: Sequence[str],
+    ops: Sequence[str],
+    count: jnp.ndarray,
+    stats: Sequence[jnp.ndarray],
+    scope: jnp.ndarray,
+    k: int,
+):
+    """Original-value + range-fix candidate pair per violated inequality atom."""
+    rows = (count > 0) & scope & rel.valid
+    out = []
+    for attr, op, stat in zip(attrs, ops, stats):
+        if op not in _FIX_KIND:
+            continue  # equality atom: no range fix (see module docstring)
+        col = rel.columns[attr]
+        cap = col.shape[0]
+        values = jnp.zeros((cap, k), col.dtype)
+        counts = jnp.zeros((cap, k), jnp.float32)
+        kinds = jnp.zeros((cap, k), jnp.int8)
+        values = values.at[:, 0].set(col)  # original value
+        values = values.at[:, 1].set(stat.astype(col.dtype))  # range bound
+        counts = counts.at[:, 0].set(1.0).at[:, 1].set(1.0)
+        kinds = kinds.at[:, 1].set(_FIX_KIND[op])
+        out.append((attr, Candidates(values, counts, kinds, rows)))
+    return out
+
+
+def dc_repair_candidates(
+    rel: Relation, dc: DC, det: DCDetectResult, scope: jnp.ndarray, k: int | None = None
+) -> Tuple[Tuple[str, Candidates], ...]:
+    """Candidate deltas for DC violations: both tuple roles (Example 4)."""
+    from repro.core.constraints import flip_op
+
+    k = k or max(rel.k, 2)
+    # role t1: atoms as written — fix on the LEFT attribute of each atom.
+    t1 = _role_candidates(
+        rel,
+        [a.left for a in dc.atoms],
+        [a.op for a in dc.atoms],
+        det.t1_count,
+        det.t1_stat,
+        scope,
+        k,
+    )
+    # role t2: flipped atoms — fix on the RIGHT attribute.
+    t2 = _role_candidates(
+        rel,
+        [a.right for a in dc.atoms],
+        [flip_op(a.op) for a in dc.atoms],
+        det.t2_count,
+        det.t2_stat,
+        scope,
+        k,
+    )
+    return tuple(t1 + t2)
+
+
+def repaired_value(rel: Relation, attr: str) -> jnp.ndarray:
+    """Most-probable concrete candidate per cell (ties -> first slot); cells
+    without an overlay keep their primary value.  Range candidates cannot be
+    materialized to a single value, so CAND_VALUE slots are preferred."""
+    if attr not in rel.cand:
+        return rel.columns[attr]
+    counts = rel.ccount[attr]
+    kinds = rel.ckind[attr]
+    eff = jnp.where(kinds == CAND_VALUE, counts, -1.0)
+    best = jnp.argmax(eff, axis=1)
+    rows = jnp.arange(counts.shape[0])
+    has = jnp.any(counts > 0, axis=1)
+    return jnp.where(has, rel.cand[attr][rows, best], rel.columns[attr])

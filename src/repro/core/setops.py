@@ -1,0 +1,192 @@
+"""Sort-based exact set/group primitives.
+
+These are the TPU-native replacements for the Spark shuffle primitives the
+paper builds on (``groupBy``, ``filter(contains)``).  Everything is static
+shape: membership is a boolean mask, groups are segment ids over a
+lexicographic sort (``jax.lax.sort`` supports multi-key sorts natively, so
+multi-attribute FD left-hand-sides are exact — no hash-collision risk).
+
+All functions treat ``mask==False`` rows as absent: their keys are replaced by
+a sentinel that sorts last, and outputs for them are zero/false.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.relation import SENTINEL, masked_keys
+
+
+def _lex_sort(keys: Sequence[jnp.ndarray], payloads: Sequence[jnp.ndarray]):
+    """Stable lexicographic sort by ``keys`` carrying ``payloads`` along."""
+    operands = tuple(keys) + tuple(payloads)
+    out = jax.lax.sort(operands, dimension=0, is_stable=True, num_keys=len(keys))
+    return out[: len(keys)], out[len(keys):]
+
+
+def _runs(sorted_keys: Sequence[jnp.ndarray]) -> jnp.ndarray:
+    """(n,) bool: position starts a new distinct key run."""
+    n = sorted_keys[0].shape[0]
+    new = jnp.zeros((n,), dtype=bool).at[0].set(True)
+    diff = jnp.zeros((n - 1,), dtype=bool) if n > 1 else None
+    if n > 1:
+        for k in sorted_keys:
+            diff = diff | (k[1:] != k[:-1])
+        new = new.at[1:].set(diff)
+    return new
+
+
+def member_in(
+    query_cols: Sequence[jnp.ndarray],
+    query_mask: jnp.ndarray,
+    set_cols: Sequence[jnp.ndarray],
+    set_mask: jnp.ndarray,
+) -> jnp.ndarray:
+    """Exact multi-column semijoin membership.
+
+    Returns ``(n_q,) bool``: for each query row ``i`` with ``query_mask[i]``,
+    whether its key tuple appears among the key tuples of ``set`` rows with
+    ``set_mask``.  Sort-merge based (O((n+m) log(n+m))), exact for any number
+    of key columns.
+    """
+    n_q = query_cols[0].shape[0]
+    n_s = set_cols[0].shape[0]
+    n = n_q + n_s
+    keys = [
+        jnp.concatenate([masked_keys(s, set_mask), masked_keys(q, query_mask)])
+        for q, s in zip(query_cols, set_cols)
+    ]
+    # tag sorts set rows before query rows inside an equal-key run (stable).
+    tag = jnp.concatenate(
+        [jnp.zeros((n_s,), jnp.int32), jnp.ones((n_q,), jnp.int32)]
+    )
+    pos = jnp.concatenate(
+        [jnp.full((n_s,), n_q, jnp.int32), jnp.arange(n_q, dtype=jnp.int32)]
+    )
+    skeys, (stag, spos) = _lex_sort(keys, (tag, pos))
+    new_run = _runs(skeys)
+    run_id = jnp.cumsum(new_run.astype(jnp.int32)) - 1
+    has_set = jax.ops.segment_max(
+        (stag == 0).astype(jnp.int32), run_id, num_segments=n
+    )
+    in_set = (has_set[run_id] > 0) & (stag == 1)
+    out = jnp.zeros((n_q,), dtype=bool)
+    out = out.at[spos].set(in_set, mode="drop")  # spos==n_q (set rows) dropped
+    return out & query_mask
+
+
+def group_info(
+    key_cols: Sequence[jnp.ndarray],
+    mask: jnp.ndarray,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Group rows by key tuple.  Returns ``(group_id, group_size)`` per row.
+
+    ``group_id`` is dense in sorted-key order (masked rows all map to the
+    last group, size counted over masked-in rows only).
+    """
+    n = key_cols[0].shape[0]
+    keys = [masked_keys(c, mask) for c in key_cols]
+    pos = jnp.arange(n, dtype=jnp.int32)
+    skeys, (spos,) = _lex_sort(keys, (pos,))
+    new_run = _runs(skeys)
+    run_id = jnp.cumsum(new_run.astype(jnp.int32)) - 1
+    # scatter group id back to original positions
+    gid = jnp.zeros((n,), jnp.int32).at[spos].set(run_id)
+    gsize = jax.ops.segment_sum(mask.astype(jnp.int32)[spos], run_id, num_segments=n)
+    return gid, gsize[gid] * mask.astype(jnp.int32)
+
+
+def group_distinct_candidates(
+    key_cols: Sequence[jnp.ndarray],
+    value_col: jnp.ndarray,
+    mask: jnp.ndarray,
+    k: int,
+    weight: jnp.ndarray | None = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Per-row distinct values of ``value_col`` within the row's key group.
+
+    The workhorse of FD repair (§4.1): for FD ``lhs -> rhs`` call with
+    ``key_cols=lhs`` and ``value_col=rhs`` to get, for every row, the rhs
+    candidate values co-occurring with its lhs, plus their frequencies — i.e.
+    the numerators of ``P(rhs | lhs)``.
+
+    Returns
+    -------
+    cand:     (n, k) candidate values (first ``distinct`` slots populated)
+    count:    (n, k) float32 frequency of each candidate in the group
+    violated: (n,)  bool — row's group has >= 2 distinct values
+    overflow: ()    bool — some group had more than ``k`` distinct values
+    """
+    n = key_cols[0].shape[0]
+    keys = [masked_keys(c, mask) for c in key_cols] + [masked_keys(value_col, mask)]
+    pos = jnp.arange(n, dtype=jnp.int32)
+    w = mask.astype(jnp.float32) if weight is None else jnp.where(mask, weight, 0.0)
+    skeys, (spos, sw) = _lex_sort(keys, (pos, w))
+    sval = skeys[-1]
+    new_group = _runs(skeys[:-1])  # new lhs-key run
+    new_pair = _runs(skeys)  # new (lhs, rhs) pair run
+    group_id = jnp.cumsum(new_group.astype(jnp.int32)) - 1
+    pair_id = jnp.cumsum(new_pair.astype(jnp.int32)) - 1
+    # weight mass per distinct (lhs, rhs) pair
+    pair_count = jax.ops.segment_sum(sw, pair_id, num_segments=n)
+    # rank of the pair within its group: pair_id - first pair_id of the group
+    first_pair = jax.ops.segment_min(pair_id, group_id, num_segments=n)
+    slot = pair_id - first_pair[group_id]
+    # per-group candidate table, scatter at pair starts only
+    at_start = new_pair
+    gcand = jnp.zeros((n, k), dtype=value_col.dtype)
+    gcount = jnp.zeros((n, k), dtype=jnp.float32)
+    row_idx = jnp.where(at_start & (slot < k), group_id, n)
+    col_idx = jnp.minimum(slot, k - 1)
+    gcand = gcand.at[row_idx, col_idx].set(sval, mode="drop")
+    gcount = gcount.at[row_idx, col_idx].set(pair_count[pair_id], mode="drop")
+    # distinct count per group; a group is "violated" iff >= 2 distinct values
+    distinct = jax.ops.segment_max(
+        jnp.where(at_start, slot + 1, 0), group_id, num_segments=n
+    )
+    overflow = jnp.any(distinct > k)
+    # map back to original row positions
+    row_group = jnp.zeros((n,), jnp.int32).at[spos].set(group_id)
+    cand = gcand[row_group]
+    count = gcount[row_group]
+    violated = (distinct[row_group] >= 2) & mask
+    cand = jnp.where(mask[:, None], cand, 0)
+    count = jnp.where(mask[:, None], count, 0.0)
+    return cand, count, violated, overflow
+
+
+def unique_counts(
+    cols: Sequence[jnp.ndarray], mask: jnp.ndarray
+) -> Tuple[List[jnp.ndarray], jnp.ndarray, jnp.ndarray]:
+    """Distinct key tuples (compacted to the front) with their frequencies.
+
+    Returns ``(values, counts, num_distinct)`` where each ``values[c]`` is a
+    (n,) array whose first ``num_distinct`` entries are the distinct keys.
+    """
+    n = cols[0].shape[0]
+    keys = [masked_keys(c, mask) for c in cols]
+    skeys, _ = _lex_sort(keys, ())
+    new_run = _runs(skeys)
+    run_id = jnp.cumsum(new_run.astype(jnp.int32)) - 1
+    # mask==False rows share the sentinel run; subtract their contribution
+    valid_sorted = jax.lax.sort(
+        tuple(keys) + (jnp.logical_not(mask).astype(jnp.int32),),
+        dimension=0,
+        is_stable=True,
+        num_keys=len(keys),
+    )[-1]
+    counts = jax.ops.segment_sum(
+        1 - valid_sorted, run_id, num_segments=n
+    )
+    dest = jnp.where(new_run & (counts[run_id] > 0), run_id, n)
+    out_vals = [
+        jnp.zeros((n,), c.dtype).at[dest].set(sk, mode="drop")
+        for c, sk in zip(cols, skeys)
+    ]
+    out_counts = jnp.zeros((n,), jnp.int32).at[dest].set(counts[run_id], mode="drop")
+    num_distinct = jnp.sum((out_counts > 0).astype(jnp.int32))
+    return out_vals, out_counts, num_distinct

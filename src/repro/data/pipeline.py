@@ -1,0 +1,159 @@
+"""CleanDataPipeline — the paper's technique woven into LM training.
+
+Every training step's batch request is a QUERY over the (dirty) example
+metadata relation — "docs with language == L and quality >= q" — and Daisy's
+cleaning operators run inside that query's plan (§5): the result is relaxed,
+violations of the metadata constraints (e.g. FD source -> language) are
+repaired probabilistically, and the delta persists.  The corpus therefore
+cleans itself incrementally, driven by what training actually samples —
+the exploratory-analysis regime of the paper with the training loop as the
+query workload.
+
+A possible-world sampling policy turns probabilistic query results into
+concrete batches: a doc qualifies with the probability mass of its
+qualifying candidates; ``threshold`` mode keeps docs whose mass exceeds tau.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.constraints import FD
+from repro.core.executor import Daisy, DaisyConfig
+from repro.core.operators import Pred, Query
+from repro.core.relation import make_relation
+from repro.data.generators import DirtyDataset, token_metadata_relation
+
+
+@dataclasses.dataclass
+class PipelineConfig:
+    batch_docs: int = 32
+    seq_len: int = 256
+    vocab_size: int = 1024
+    qualify: str = "threshold"  # 'threshold' | 'sample'
+    tau: float = 0.5
+    k: int = 8
+    seed: int = 0
+
+
+class CleanDataPipeline:
+    """Query-driven, incrementally-cleaning batch source."""
+
+    def __init__(
+        self,
+        meta: DirtyDataset,
+        rules: Sequence[FD],
+        cfg: PipelineConfig,
+    ):
+        self.cfg = cfg
+        self.meta = meta
+        n = len(meta.data["doc_id"])
+        rel = make_relation(
+            meta.data,
+            overlay=[a for r in rules for a in r.attrs],
+            k=cfg.k,
+            rules=[r.name for r in rules],
+        )
+        self.daisy = Daisy(
+            {"docs": rel}, {"docs": list(rules)},
+            DaisyConfig(k=cfg.k, use_cost_model=True, expected_queries=64),
+        )
+        self.rng = np.random.default_rng(cfg.seed)
+        # deterministic synthetic tokens per doc (hash-seeded)
+        self._doc_seed = np.arange(n, dtype=np.int64) * 2654435761 % (2**31)
+        self.queries_run = 0
+        self.reports: List = []
+
+    # --------------------------------------------------------------- queries
+    def request(self, preds: Sequence[Pred]) -> np.ndarray:
+        """Run one cleaned metadata query; returns qualifying doc ids."""
+        q = Query("docs", preds=tuple(preds), project=("doc_id",))
+        res = self.daisy.execute(q)
+        self.queries_run += 1
+        self.reports.append(res.report)
+        rel = self.daisy.db["docs"]
+        mask = np.asarray(res.mask)
+
+        if self.cfg.qualify == "threshold":
+            keep = mask
+        else:  # sample each doc by its qualifying probability mass
+            probs = self._qualify_mass(rel, preds)
+            keep = mask & (self.rng.random(len(mask)) < probs)
+        return np.asarray(rel.columns["doc_id"])[keep]
+
+    def _qualify_mass(self, rel, preds) -> np.ndarray:
+        mass = np.ones(rel.capacity, np.float32)
+        for p in preds:
+            if p.col in rel.cand:
+                probs = np.asarray(rel.probs(p.col))
+                vals = np.asarray(rel.cand[p.col])
+                ok = _np_op(vals, p.op, p.value)
+                has = probs.sum(axis=1) > 0
+                m = np.where(has, (probs * ok).sum(axis=1), None)
+                base = _np_op(np.asarray(rel.columns[p.col]), p.op, p.value)
+                mass *= np.where(has, (probs * ok).sum(axis=1), base.astype(np.float32))
+            else:
+                mass *= _np_op(np.asarray(rel.columns[p.col]), p.op, p.value)
+        return mass
+
+    # ---------------------------------------------------------------- batches
+    def batches(
+        self, workload: Sequence[Sequence[Pred]], steps: int
+    ) -> Iterator[Dict[str, jnp.ndarray]]:
+        """Cycle the query workload, yielding token batches."""
+        for i in range(steps):
+            preds = workload[i % len(workload)]
+            docs = self.request(preds)
+            if len(docs) == 0:
+                docs = np.asarray(self.meta.data["doc_id"][:1])
+            pick = self.rng.choice(docs, self.cfg.batch_docs, replace=True)
+            yield self._tokens_for(pick)
+
+    def _tokens_for(self, doc_ids: np.ndarray) -> Dict[str, jnp.ndarray]:
+        b, s = self.cfg.batch_docs, self.cfg.seq_len
+        toks = np.empty((b, s + 1), np.int32)
+        for i, d in enumerate(doc_ids):
+            r = np.random.default_rng(self._doc_seed[int(d)])
+            toks[i] = r.integers(0, self.cfg.vocab_size, s + 1)
+        return {
+            "tokens": jnp.asarray(toks[:, :-1]),
+            "labels": jnp.asarray(toks[:, 1:]),
+        }
+
+    # -------------------------------------------------------------- metrics
+    def cleaning_progress(self) -> Dict[str, float]:
+        rel = self.daisy.db["docs"]
+        total = float(np.asarray(rel.num_rows()))
+        checked = {}
+        for rule in self.daisy.rules["docs"]:
+            c = np.asarray(rel.checked.get(rule.name, np.zeros(1)))
+            checked[rule.name] = float(c.sum()) / total
+        return checked
+
+
+def _np_op(x, op, v):
+    import operator
+
+    return {
+        "==": operator.eq, "!=": operator.ne, "<": operator.lt,
+        "<=": operator.le, ">": operator.gt, ">=": operator.ge,
+    }[op](x, v)
+
+
+def default_pipeline(
+    n_docs: int = 2048, cfg: Optional[PipelineConfig] = None
+) -> Tuple[CleanDataPipeline, List[List[Pred]]]:
+    """The standard corpus + per-language query workload."""
+    cfg = cfg or PipelineConfig()
+    meta = token_metadata_relation(n_docs)
+    rules = [FD("src_lang", "source", "language")]
+    pipe = CleanDataPipeline(meta, rules, cfg)
+    workload = [
+        [Pred("language", "==", lang), Pred("quality", ">=", 0.25)]
+        for lang in range(16)
+    ]
+    return pipe, workload

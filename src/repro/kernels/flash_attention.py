@@ -1,0 +1,147 @@
+"""Pallas TPU kernel: flash attention (online softmax, GQA, causal/sliding).
+
+The LM substrate's compute hot-spot.  Standard two-level tiling:
+
+* grid = (batch * q_heads, Sq/block_q, Sk/block_kv), kv innermost so the
+  output block (indexed by (bh, qi)) is revisited consecutively;
+* online softmax state (running max ``m``, normalizer ``l``, accumulator
+  ``acc``) lives in VMEM scratch, f32;
+* causal pruning: kv blocks strictly after the q block are skipped via the
+  grid predicate (``@pl.when``), the diagonal block gets the triangular mask;
+* sliding-window (gemma-style local attention) additionally skips kv blocks
+  strictly before the window and masks inside the boundary block;
+* GQA: the kv head index map is ``h // (Hq // Hkv)`` — no repeat in HBM.
+
+Block sizes default to (128, 128); head_dim is zero-padded to a multiple of
+128 lanes by the wrapper in ops.py when needed.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _kernel(
+    block_q: int,
+    block_kv: int,
+    scale: float,
+    causal: bool,
+    window: int | None,
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    m_scr,
+    l_scr,
+    acc_scr,
+):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    k_start = kj * block_kv
+
+    # block-level pruning: causal skip (kv entirely after q) and window skip
+    # (kv entirely before q's window).
+    run = jnp.bool_(True)
+    if causal:
+        run = run & (k_start <= q_start + block_q - 1)
+    if window is not None:
+        run = run & (k_start + block_kv - 1 > q_start - window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)  # (block_q, d)
+        k = k_ref[0].astype(jnp.float32)  # (block_kv, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (block_q, block_kv)
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = jnp.ones_like(s, dtype=bool)
+        if causal:
+            mask = mask & (k_pos <= q_pos)
+        if window is not None:
+            mask = mask & (k_pos > q_pos - window)
+        s = jnp.where(mask, s, _NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    @pl.when(kj == nk - 1)
+    def _finalize():
+        l = l_scr[...]
+        safe_l = jnp.where(l > 0, l, 1.0)
+        o_ref[0] = (acc_scr[...] / safe_l).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D).  Returns (B, Hq, Sq, D)."""
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    block_q = min(block_q, sq)
+    block_kv = min(block_kv, sk)
+    assert sq % block_q == 0 and sk % block_kv == 0, "pad seq to block multiple"
+
+    qr = q.reshape(b * hq, sq, d)
+    kr = k.reshape(b * hkv, sk, d)
+    vr = v.reshape(b * hkv, sk, d)
+
+    def kv_map(bh, qi, kj):
+        return (bh // group, kj, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, block_q, block_kv, scale, causal, window),
+        grid=(b * hq, sq // block_q, sk // block_kv),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, qi, kj: (bh, qi, 0)),
+            pl.BlockSpec((1, block_kv, d), kv_map),
+            pl.BlockSpec((1, block_kv, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda bh, qi, kj: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),  # running max m
+            pltpu.VMEM((block_q, 1), jnp.float32),  # normalizer l
+            pltpu.VMEM((block_q, d), jnp.float32),  # accumulator
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(b, hq, sq, d)

@@ -1,0 +1,110 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+Selection policy (``force`` overrides):
+
+* on TPU -> compiled Pallas kernels;
+* elsewhere -> the pure-jnp oracles from ``ref.py`` (vectorized, fast on CPU).
+  Interpret-mode Pallas execution is reserved for the kernel-correctness
+  tests (``force="interpret"``) because it runs the kernel body per grid step
+  in Python — correct but orders of magnitude slower than the oracle.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.dc_pairs import dc_role_scan_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.semijoin import semijoin_pallas
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _mode(force: str | None) -> str:
+    if force is not None:
+        return force
+    return "pallas" if on_tpu() else "ref"
+
+
+def dc_role_scan(
+    l_cols: Sequence[jnp.ndarray],
+    r_cols: Sequence[jnp.ndarray],
+    ops: Sequence[str],
+    row_scope: jnp.ndarray,
+    col_scope: jnp.ndarray,
+    reduces: Sequence[str],
+    block: int = 256,
+    force: str | None = None,
+) -> Tuple[jnp.ndarray, List[jnp.ndarray]]:
+    mode = _mode(force)
+    if mode == "ref":
+        return ref.dc_role_scan(
+            l_cols, r_cols, ops, row_scope, col_scope, reduces, block=block
+        )
+    return dc_role_scan_pallas(
+        l_cols,
+        r_cols,
+        ops,
+        row_scope,
+        col_scope,
+        reduces,
+        block=block,
+        interpret=(mode == "interpret"),
+    )
+
+
+def semijoin(
+    query: jnp.ndarray,
+    query_mask: jnp.ndarray,
+    keys: jnp.ndarray,
+    keys_mask: jnp.ndarray,
+    block: int = 512,
+    force: str | None = None,
+) -> jnp.ndarray:
+    mode = _mode(force)
+    if mode == "ref":
+        return ref.semijoin(query, query_mask, keys, keys_mask, block=block)
+    return semijoin_pallas(
+        query, query_mask, keys, keys_mask, block=block, interpret=(mode == "interpret")
+    )
+
+
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_kv: int = 128,
+    force: str | None = None,
+) -> jnp.ndarray:
+    mode = _mode(force)
+    if mode == "ref":
+        # long sequences: the blocked online-softmax path (O(s) live memory,
+        # same tiling as the Pallas kernel); short ones: the exact oracle.
+        sq, sk = q.shape[2], k.shape[2]
+        if sq >= 1024 and sq % 512 == 0 and sk % 1024 == 0:
+            return ref.attention_blocked(
+                q, k, v, causal=causal, window=window, scale=scale
+            )
+        return ref.attention(q, k, v, causal=causal, window=window, scale=scale)
+    return flash_attention_pallas(
+        q,
+        k,
+        v,
+        causal=causal,
+        window=window,
+        scale=scale,
+        block_q=block_q,
+        block_kv=block_kv,
+        interpret=(mode == "interpret"),
+    )

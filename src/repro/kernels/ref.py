@@ -1,0 +1,259 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the semantics-defining implementations: each Pallas kernel is
+validated against the function here (interpret mode on CPU, shape/dtype
+sweeps in tests/test_kernels.py).  They are also the execution path picked by
+``ops.py`` when not running on TPU, so the whole system works on CPU.
+
+The pairwise scans are blocked with ``lax.fori_loop`` over column tiles so
+the oracle itself never materializes the O(n^2) matrix.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _apply_op(a: jnp.ndarray, op: str, b: jnp.ndarray) -> jnp.ndarray:
+    if op == "==":
+        return a == b
+    if op == "!=":
+        return a != b
+    if op == "<":
+        return a < b
+    if op == "<=":
+        return a <= b
+    if op == ">":
+        return a > b
+    if op == ">=":
+        return a >= b
+    raise ValueError(op)
+
+
+def _identity(dtype, reduce: str):
+    if reduce == "min":
+        return jnp.array(np.iinfo(np.int32).max, dtype) if jnp.issubdtype(
+            dtype, jnp.integer
+        ) else jnp.array(np.inf, dtype)
+    if reduce == "max":
+        return jnp.array(np.iinfo(np.int32).min, dtype) if jnp.issubdtype(
+            dtype, jnp.integer
+        ) else jnp.array(-np.inf, dtype)
+    raise ValueError(reduce)
+
+
+def dc_role_scan(
+    l_cols: Sequence[jnp.ndarray],
+    r_cols: Sequence[jnp.ndarray],
+    ops: Sequence[str],
+    row_scope: jnp.ndarray,
+    col_scope: jnp.ndarray,
+    reduces: Sequence[str],
+    block: int = 256,
+) -> Tuple[jnp.ndarray, List[jnp.ndarray]]:
+    """Oracle for the ``dc_pairs`` theta-join kernel (one role).
+
+    For every row i in ``row_scope``, scan partners j in ``col_scope``
+    (i != j).  A pair violates iff ALL atoms hold: ``l_cols[a][i] op_a
+    r_cols[a][j]``.  Returns:
+
+    * ``count``: (n,) int32 — number of violating partners of i,
+    * ``stats[a]``: (n,) — min or max (per ``reduces[a]``) of ``r_cols[a][j]``
+      over i's violating partners; identity value when count == 0.
+    """
+    n = l_cols[0].shape[0]
+    nb = -(-n // block)
+    pad = nb * block - n
+    rs = row_scope
+    cs = jnp.pad(col_scope, (0, pad))
+    r_pad = [jnp.pad(r, (0, pad)) for r in r_cols]
+    idents = [_identity(r.dtype, red) for r, red in zip(r_cols, reduces)]
+    row_ids = jnp.arange(n, dtype=jnp.int32)
+
+    def body(jb, state):
+        count, stats = state
+        sl = jb * block
+        cs_t = jax.lax.dynamic_slice_in_dim(cs, sl, block)
+        col_ids = sl + jnp.arange(block, dtype=jnp.int32)
+        viol = rs[:, None] & cs_t[None, :] & (row_ids[:, None] != col_ids[None, :])
+        for a, (l, op) in enumerate(zip(l_cols, ops)):
+            r_t = jax.lax.dynamic_slice_in_dim(r_pad[a], sl, block)
+            viol = viol & _apply_op(l[:, None], op, r_t[None, :])
+        count = count + jnp.sum(viol.astype(jnp.int32), axis=1)
+        new_stats = []
+        for a, red in enumerate(reduces):
+            r_t = jax.lax.dynamic_slice_in_dim(r_pad[a], sl, block)
+            vals = jnp.where(viol, r_t[None, :], idents[a])
+            tile_stat = jnp.min(vals, axis=1) if red == "min" else jnp.max(vals, axis=1)
+            combined = (
+                jnp.minimum(stats[a], tile_stat)
+                if red == "min"
+                else jnp.maximum(stats[a], tile_stat)
+            )
+            new_stats.append(combined)
+        return count, tuple(new_stats)
+
+    init = (
+        jnp.zeros((n,), jnp.int32),
+        tuple(jnp.full((n,), idents[a], r_cols[a].dtype) for a in range(len(ops))),
+    )
+    count, stats = jax.lax.fori_loop(0, nb, body, init)
+    return count, list(stats)
+
+
+def semijoin(
+    query: jnp.ndarray,
+    query_mask: jnp.ndarray,
+    keys: jnp.ndarray,
+    keys_mask: jnp.ndarray,
+    block: int = 512,
+) -> jnp.ndarray:
+    """Oracle for the ``semijoin`` membership kernel (single key column).
+
+    ``(n,) bool``: query[i] appears among keys[j] with keys_mask[j].
+    """
+    m = keys.shape[0]
+    nb = -(-m // block)
+    pad = nb * block - m
+    kp = jnp.pad(keys, (0, pad))
+    km = jnp.pad(keys_mask, (0, pad))
+
+    def body(jb, found):
+        sl = jb * block
+        k_t = jax.lax.dynamic_slice_in_dim(kp, sl, block)
+        m_t = jax.lax.dynamic_slice_in_dim(km, sl, block)
+        hit = jnp.any((query[:, None] == k_t[None, :]) & m_t[None, :], axis=1)
+        return found | hit
+
+    found = jax.lax.fori_loop(0, nb, body, jnp.zeros(query.shape, bool))
+    return found & query_mask
+
+
+def attention_blocked(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    block_q: int = 512,
+    block_kv: int = 1024,
+) -> jnp.ndarray:
+    """Memory-bounded attention: the same online-softmax tiling as the
+    Pallas kernel, expressed as nested ``lax.scan``s in pure jnp.  Live
+    temporaries are (b, h, block_q, block_kv) — this is the execution path
+    for long sequences off-TPU (the naive oracle materializes O(s^2)).
+
+    The kv scan body is rematerialized so the backward pass replays tiles
+    instead of stashing every (bq, bkv) probability block.
+    """
+    b, hq, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    group = hq // hkv
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    block_q = min(block_q, sq)
+    block_kv = min(block_kv, sk)
+    assert sq % block_q == 0 and sk % block_kv == 0
+    nq, nk = sq // block_q, sk // block_kv
+    kr = k if group == 1 else jnp.repeat(k, group, axis=1)
+    vr = v if group == 1 else jnp.repeat(v, group, axis=1)
+    # layout: (nq, b, hq, block_q, d)
+    qb = q.reshape(b, hq, nq, block_q, d).transpose(2, 0, 1, 3, 4)
+    kb = kr.reshape(b, hq, nk, block_kv, d).transpose(2, 0, 1, 3, 4)
+    vb = vr.reshape(b, hq, nk, block_kv, d).transpose(2, 0, 1, 3, 4)
+
+    def q_block(qi, qt):
+        # qi is a CARRIED counter (not scan xs): were the block index an xs
+        # array, XLA hoists the position masks out of the loop and
+        # materializes all of them stacked in HBM.
+        def kv_block(state, kv):
+            kt, vt = kv
+            m_prev, l_prev, acc, kj = state
+            # bf16 operands, f32 accumulation — the MXU contract
+            s = jnp.einsum(
+                "bhqd,bhkd->bhqk", qt, kt,
+                preferred_element_type=jnp.float32,
+            ) * scale
+            q_pos = qi * block_q + jnp.arange(block_q)
+            k_pos = kj * block_kv + jnp.arange(block_kv)
+            mask = jnp.ones((block_q, block_kv), bool)
+            if causal:
+                mask = mask & (k_pos[None, :] <= q_pos[:, None])
+            if window is not None:
+                mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+            s = jnp.where(mask[None, None], s, -1e30)
+            m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            p = jnp.where(mask[None, None], p, 0.0)
+            alpha = jnp.exp(m_prev - m_new)
+            l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p.astype(v.dtype), vt,
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc, kj + 1), None
+
+        init = (
+            jnp.full((b, hq, block_q), -1e30, jnp.float32),
+            jnp.zeros((b, hq, block_q), jnp.float32),
+            jnp.zeros((b, hq, block_q, d), jnp.float32),
+            jnp.int32(0),
+        )
+        (m, l, acc, _), _ = jax.lax.scan(
+            jax.checkpoint(kv_block), init, (kb, vb)
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return qi + 1, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_block, jnp.int32(0), qb)
+    # outs: (nq, b, hq, block_q, d) -> (b, hq, sq, d)
+    return outs.transpose(1, 2, 0, 3, 4).reshape(b, hq, sq, d)
+
+
+def attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int | jnp.ndarray = 0,
+    kv_len: jnp.ndarray | None = None,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """Oracle for the flash-attention kernel.
+
+    q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D) with Hq % Hkv == 0 (GQA).
+    ``q_offset`` is the absolute position of q[0] (decode: Sq=1, offset=t).
+    ``window``: sliding-window width (gemma-style local attention).
+    ``kv_len``: valid KV prefix length (decode with a preallocated cache).
+    """
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    sk = k.shape[2]
+    group = hq // hkv
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    kr = jnp.repeat(k, group, axis=1)
+    vr = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, kr) * scale
+    q_pos = q_offset + jnp.arange(sq)
+    k_pos = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask = mask & (k_pos[None, :] <= q_pos[:, None])
+    if window is not None:
+        mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+    if kv_len is not None:
+        mask = mask & (k_pos[None, :] < kv_len)
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    # rows with no visible key (can happen with padded caches) -> zeros, and
+    # keep the softmax NaN-free by subtracting a finite max for such rows.
+    row_visible = jnp.any(mask, axis=-1)  # (sq, sk) -> (sq,)
+    safe_logits = jnp.where(row_visible[None, None, :, None], logits, 0.0)
+    probs = jax.nn.softmax(safe_logits, axis=-1)
+    probs = jnp.where(row_visible[None, None, :, None], probs, 0.0)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, vr).astype(q.dtype)

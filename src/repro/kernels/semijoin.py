@@ -1,0 +1,61 @@
+"""Pallas TPU kernel: blocked semijoin membership.
+
+The relaxation fixpoint (Algorithm 1) calls ``contains`` twice per iteration;
+fusing the membership OR-reduce into VMEM tiles avoids materializing the
+(n x m) boolean matrix in HBM.  Single key column (dictionary codes); the
+multi-column case goes through the exact sort-merge path in core/setops.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(bm, bn, q_ref, k_ref, km_ref, out_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    q = q_ref[...]
+    k = k_ref[...]
+    km = km_ref[...]
+    hit = jnp.any((q[:, None] == k[None, :]) & (km > 0)[None, :], axis=1)
+    out_ref[...] = out_ref[...] | hit.astype(jnp.int32)
+
+
+def semijoin_pallas(
+    query: jnp.ndarray,
+    query_mask: jnp.ndarray,
+    keys: jnp.ndarray,
+    keys_mask: jnp.ndarray,
+    block: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    n = query.shape[0]
+    m = keys.shape[0]
+    nb_q = -(-n // block)
+    nb_k = -(-m // block)
+
+    qp = jnp.pad(query, (0, nb_q * block - n))
+    kp = jnp.pad(keys, (0, nb_k * block - m))
+    kmp = jnp.pad(keys_mask, (0, nb_k * block - m)).astype(jnp.int32)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, block, block),
+        grid=(nb_q, nb_k),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i, j: (i,)),
+            pl.BlockSpec((block,), lambda i, j: (j,)),
+            pl.BlockSpec((block,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((nb_q * block,), jnp.int32),
+        interpret=interpret,
+    )(qp, kp, kmp)
+    return (out[:n] > 0) & query_mask

@@ -1,0 +1,301 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell against ShapeDtypeStruct stand-ins, and extract the roofline
+terms from the compiled artifact.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out d/]
+
+The FIRST TWO LINES above force 512 host platform devices BEFORE any jax
+import — jax locks the device count at first initialization.
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from functools import partial
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.shapes import (
+    MAMBA_CHUNK,
+    SHAPES,
+    TRAIN_MICROBATCHES,
+    ShapeSpec,
+    cell_applicable,
+    input_specs,
+)
+from repro.dist.sharding import (
+    batch_specs,
+    cache_specs,
+    param_specs,
+    shardings,
+)
+from repro.launch.hlo_analysis import (
+    collective_stats,
+    model_flops,
+    roofline_terms,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.models.params import abstract_params
+from repro.models.transformer import decode_step, prefill
+from repro.train.optim import OptConfig, init_opt_state
+from repro.train.steps import make_train_step
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _rep(mesh):
+    return NamedSharding(mesh, P())
+
+
+def build_cell(arch: str, shape_name: str, mesh, opt_override: Optional[str] = None,
+               fsdp: bool = True, microbatch_override: Optional[int] = None,
+               kv_quant: bool = False, dp_only: bool = False):
+    """Returns (lowered, meta) for one cell."""
+    tp = mesh.shape["model"]
+    cfg = get_config(arch).canonicalize(tp=1 if dp_only else tp)
+    if opt_override:
+        cfg = dataclasses.replace(cfg, optimizer=opt_override)
+    if kv_quant:
+        cfg = dataclasses.replace(cfg, kv_quant=True)
+    if cfg.moe is not None:
+        dp = int(np.prod([mesh.shape[a] for a in mesh.axis_names if a != "model"]))
+        cfg = dataclasses.replace(cfg, moe_groups=dp)
+    shape = SHAPES[shape_name]
+    ok, why = cell_applicable(cfg, shape)
+    if not ok:
+        return None, {"skipped": why}
+
+    aparams = abstract_params(cfg)
+    pspecs = param_specs(aparams, mesh, fsdp=fsdp)
+    if dp_only:
+        # TP right-sizing experiment: weights fully sharded over BOTH axes
+        # as pure FSDP (no tensor-parallel dim); batch over both axes too.
+        from repro.dist.sharding import param_specs_dp_only
+
+        pspecs = param_specs_dp_only(aparams, mesh)
+    pshard = shardings(pspecs, mesh)
+    specs = input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        opt_cfg = OptConfig(name=cfg.optimizer)
+        aopt = jax.eval_shape(partial(init_opt_state, cfg=opt_cfg), aparams)
+        # moments mirror the param specs (adafactor's factored stats drop
+        # the reduced dims from the spec); step is replicated
+        ospecs = {}
+        for k in aopt.keys():
+            if k == "step":
+                ospecs[k] = P()
+            elif k == "vr":  # p.shape[:-1]
+                ospecs[k] = jax.tree.map(
+                    lambda sp: P(*sp[:-1]) if len(sp) else P(), pspecs,
+                    is_leaf=lambda x: isinstance(x, P),
+                )
+            elif k == "vc":  # p.shape[:-2] + p.shape[-1:]
+                ospecs[k] = jax.tree.map(
+                    lambda sp: P(*(tuple(sp[:-2]) + (sp[-1],))) if len(sp) >= 2 else P(),
+                    pspecs, is_leaf=lambda x: isinstance(x, P),
+                )
+            else:
+                ospecs[k] = pspecs
+        oshard = shardings(ospecs, mesh)
+        bspecs = batch_specs(specs, mesh, all_axes=dp_only)
+        bshard = shardings(bspecs, mesh)
+        n_micro = microbatch_override or TRAIN_MICROBATCHES.get(cfg.name, 1)
+        # microbatches must stay shardable over the full DP extent: on the
+        # multi-pod mesh dp=32, so mb_global = batch/n_micro >= dp
+        dp_size = int(np.prod([mesh.shape[a] for a in mesh.axis_names
+                               if a != "model"]))
+        n_micro = max(min(n_micro, shape.global_batch // dp_size), 1)
+        step = make_train_step(cfg, opt_cfg, n_micro=n_micro, mamba_chunk=MAMBA_CHUNK)
+        fn = jax.jit(
+            step,
+            in_shardings=(pshard, oshard, bshard),
+            out_shardings=(pshard, oshard, _rep(mesh)),
+            donate_argnums=(0, 1),
+        )
+        with mesh:
+            lowered = fn.lower(aparams, aopt, specs)
+        meta = {"kind": "train", "n_micro": n_micro}
+    elif shape.kind == "prefill":
+        bspecs = batch_specs(specs, mesh)
+        bshard = shardings(bspecs, mesh)
+        from repro.models.transformer import init_cache
+
+        acache = jax.eval_shape(
+            lambda: init_cache(cfg, shape.global_batch, shape.seq_len, jnp.bfloat16)
+        )
+        cspecs = cache_specs(acache, mesh)
+        cshard = shardings(cspecs, mesh)
+
+        def prefill_step(params, batch):
+            return prefill(params, cfg, batch, s_max=shape.seq_len,
+                           mamba_chunk=MAMBA_CHUNK)
+
+        fn = jax.jit(
+            prefill_step,
+            in_shardings=(pshard, bshard),
+            out_shardings=(_rep(mesh), cshard),
+        )
+        with mesh:
+            lowered = fn.lower(aparams, specs)
+        meta = {"kind": "prefill"}
+    else:  # decode
+        acache = specs["cache"]
+        cspecs = cache_specs(acache, mesh)
+        cshard = shardings(cspecs, mesh)
+        tshard = shardings(batch_specs({"token": specs["token"]}, mesh), mesh)["token"]
+
+        def serve_step(params, cache, token):
+            return decode_step(params, cfg, cache, token)
+
+        fn = jax.jit(
+            serve_step,
+            in_shardings=(pshard, cshard, tshard),
+            out_shardings=(_rep(mesh), cshard),
+            donate_argnums=(1,),
+        )
+        with mesh:
+            lowered = fn.lower(aparams, acache, specs["token"])
+        meta = {"kind": "decode"}
+    meta["arch"] = cfg.name
+    meta["shape"] = shape_name
+    return lowered, meta
+
+
+def analyse(lowered, meta, mesh, shape: ShapeSpec, cfg) -> Dict:
+    from repro.launch.hlo_cost import analyze_hlo
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    compile_s = time.time() - t0
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    hlo = compiled.as_text()
+    # trip-count-aware roll-up: cost_analysis() counts while bodies ONCE,
+    # which undercounts the scanned unit stack / microbatch loop (see
+    # launch/hlo_cost.py).  The roll-up is the headline; raw values kept.
+    roll = analyze_hlo(hlo)
+    terms = roofline_terms(roll.flops, roll.bytes, roll.coll_bytes)
+    mf = model_flops(cfg, shape.kind, shape.seq_len, shape.global_batch)
+    chips = int(np.prod(list(mesh.shape.values())))
+    mf_per_chip = mf / chips
+    out = {
+        **meta,
+        "mesh": dict(mesh.shape),
+        "chips": chips,
+        "compile_s": round(compile_s, 1),
+        "per_device": {
+            "flops": roll.flops,
+            "hbm_bytes": roll.bytes,
+            "hbm_bytes_fused_estimate": roll.bytes_fused,
+            "collective_bytes": roll.coll_bytes,
+            "collective_counts": {
+                k: round(v, 1) for k, v in roll.coll_counts.items()
+            },
+            "collective_bytes_by_kind": {
+                k: v for k, v in roll.coll_bytes_by_kind.items()
+            },
+            "unknown_trip_loops": roll.unknown_trip_loops,
+        },
+        "xla_cost_analysis_raw": {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        },
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "peak_bytes": getattr(mem, "temp_size_in_bytes", 0)
+            + getattr(mem, "argument_size_in_bytes", 0),
+        },
+        "roofline": terms,
+        "model_flops_per_chip": mf_per_chip,
+        "useful_flops_ratio": (mf_per_chip / roll.flops) if roll.flops else 0.0,
+    }
+    return out
+
+
+def run_cell(arch, shape_name, multi_pod, out_dir=None, **kw) -> Dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    tp = mesh.shape["model"]
+    cfg = get_config(arch).canonicalize(tp=tp)
+    shape = SHAPES[shape_name]
+    lowered, meta = build_cell(arch, shape_name, mesh, **kw)
+    if lowered is None:
+        rec = {"arch": cfg.name, "shape": shape_name,
+               "mesh": dict(mesh.shape), **meta}
+    else:
+        rec = analyse(lowered, meta, mesh, shape, cfg)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = "multipod" if multi_pod else "singlepod"
+        path = os.path.join(out_dir, f"{cfg.name}__{shape_name}__{tag}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--fsdp", type=int, default=1)
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--kv-quant", action="store_true")
+    ap.add_argument("--dp-only", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape_name in SHAPES:
+                cells.append((arch, shape_name))
+    else:
+        cells.append((args.arch, args.shape))
+
+    failures = 0
+    for arch, shape_name in cells:
+        try:
+            rec = run_cell(arch, shape_name, args.multi_pod, args.out,
+                           fsdp=bool(args.fsdp),
+                           microbatch_override=args.microbatches,
+                           kv_quant=args.kv_quant, dp_only=args.dp_only)
+            if "skipped" in rec:
+                print(f"[skip] {arch} x {shape_name}: {rec['skipped']}")
+                continue
+            r = rec["roofline"]
+            print(
+                f"[ok] {rec['arch']} x {shape_name} "
+                f"({'multi' if args.multi_pod else 'single'}-pod): "
+                f"compute {r['compute_s']:.4f}s | memory {r['memory_s']:.4f}s | "
+                f"collective {r['collective_s']:.4f}s | dominant {r['dominant']} "
+                f"| peak {rec['memory']['peak_bytes']/2**30:.2f} GiB/dev "
+                f"| compile {rec['compile_s']}s"
+            )
+        except Exception as e:
+            failures += 1
+            print(f"[FAIL] {arch} x {shape_name}: {type(e).__name__}: {e}")
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,128 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+``collective_bytes`` is not in ``cost_analysis()``: we parse the optimized
+HLO text and sum the operand sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute op.  Shapes in HLO are
+per-SHARD (post-SPMD), so the sums are per-device wire bytes — exactly the
+numerator of the collective roofline term.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (3 links usable per chip on a 2-D torus; we charge the single-link
+worst case, as the system prompt specifies).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Tuple
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of an HLO shape string like 'f32[16,128]{1,0}' or a tuple
+    '(f32[2,4], s32[8])'."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    bytes_by_kind: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    """Sum output-shape bytes of every collective op in the module.
+
+    HLO line form:  <shape> <op-name> = <opcode>(...operands...)
+    e.g.  %ag = bf16[4,1024,512] all-gather(bf16[4,1024,32] %p), ...
+    We charge the RESULT shape (bytes that cross the wire into each device;
+    for all-reduce result==operand, for all-gather it is the gathered size —
+    the standard per-device wire accounting under ring algorithms).
+    """
+    counts: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    nbytes: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # match  "... = <shape> <collective>(" — opcode right before '('
+        m = re.search(r"=\s+((?:\([^)]*\)|\S+))\s+([\w-]+)(?:-start|-done)?\(", s)
+        if not m:
+            continue
+        shape_str, opcode = m.group(1), m.group(2)
+        base = opcode.replace("-start", "").replace("-done", "")
+        if base in _COLLECTIVES:
+            if opcode.endswith("-done"):
+                continue  # counted at -start
+            counts[base] += 1
+            nbytes[base] += _shape_bytes(shape_str)
+    return CollectiveStats(counts, nbytes)
+
+
+def roofline_terms(
+    flops: float,
+    hbm_bytes: float,
+    coll_bytes: float,
+    chips: int = 1,
+) -> Dict[str, float]:
+    """The three §Roofline terms in seconds.  flops/bytes are PER-DEVICE
+    (post-SPMD shapes), so chips=1 unless aggregating global numbers."""
+    compute_s = flops / (chips * PEAK_FLOPS)
+    memory_s = hbm_bytes / (chips * HBM_BW)
+    collective_s = coll_bytes / (chips * ICI_BW)
+    dominant = max(
+        ("compute", compute_s), ("memory", memory_s), ("collective", collective_s),
+        key=lambda kv: kv[1],
+    )[0]
+    total = max(compute_s, memory_s, collective_s)
+    return {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "bound_s": total,
+        "roofline_fraction": compute_s / total if total > 0 else 0.0,
+    }
+
+
+def model_flops(cfg, shape_kind: str, seq: int, batch: int) -> float:
+    """MODEL_FLOPS = 6*N*D (train) or 2*N_active*D (decode/prefill fwd-only),
+    N = active params, D = tokens processed."""
+    n_active = cfg.active_param_count()
+    if shape_kind == "train":
+        tokens = seq * batch
+        return 6.0 * n_active * tokens
+    if shape_kind == "prefill":
+        tokens = seq * batch
+        return 2.0 * n_active * tokens
+    tokens = 1 * batch  # decode: one token per sequence
+    return 2.0 * n_active * tokens

@@ -1,0 +1,327 @@
+"""Trip-count-aware HLO cost roll-up.
+
+``compiled.cost_analysis()`` counts every while-loop body ONCE — under our
+scanned unit stacks and microbatch accumulation that undercounts FLOPs by
+the product of all enclosing trip counts (verified empirically: reported
+FLOPs scale as 1/n_micro).  This module parses ``compiled.as_text()`` and
+rolls costs up through the call graph:
+
+  * **flops**: 2*M*N*K for every ``dot`` (batch/contracting dims parsed),
+    including dots inside fusions;
+  * **hbm bytes**: operand + result bytes of every top-level instruction
+    (fusion internals are free, matching XLA's fusion-aware accounting;
+    bookkeeping ops — tuple/gte/parameter/constant/bitcast — are free);
+  * **collective bytes**: result-shape bytes per all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute;
+  * **while**: body+cond costs multiply by the trip count recovered from
+    the loop condition's ``compare(iter, constant)``;
+  * **fusion/call/conditional**: fusion adds called-dot flops, call adds
+    everything, conditional takes the max branch.
+
+Shapes in the SPMD-partitioned module are per-device, so all results are
+per-chip roofline numerators.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3b11fnuz": 1,
+}
+
+_COLLECTIVES = {
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+}
+
+_FREE_OPS = {
+    "tuple", "get-tuple-element", "parameter", "constant", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+# ops a TPU compile fuses into producers/consumers; XLA:CPU leaves many at
+# top level, which inflates a naive bytes-accessed sum.  ``bytes_fused``
+# skips these (the TPU-realistic memory term); ``bytes`` counts everything
+# (the conservative bound).  Both are reported.
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "select", "convert",
+    "broadcast", "compare", "exponential", "exponential-minus-one", "log",
+    "log-plus-one", "tanh", "rsqrt", "sqrt", "negate", "maximum", "minimum",
+    "abs", "and", "or", "xor", "not", "clamp", "floor", "ceil", "power",
+    "sign", "cosine", "sine", "is-finite", "remainder", "atan2",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic",
+    "round-nearest-afz", "round-nearest-even", "reduce-precision",
+}
+
+_SHAPE_RE = re.compile(r"(\w[\w\d]*)\[([\d,]*)\]")
+# tuple shapes may contain /*index=N*/ comments — match to the balanced
+# close-paren (tuple shapes never nest parens)
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\([^()]*\)|\S+?)\s+([\w\-]+)\((.*)$"
+)
+# header params may contain nested parens (tuple types): match the prefix only
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+
+
+def shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_dims(shape_str: str) -> List[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str
+    opcode: str
+    rest: str  # operand list + attributes (raw tail of the line)
+
+    def operand_names(self) -> List[str]:
+        # ``rest`` starts right AFTER the opcode's opening paren (consumed by
+        # the instruction regex), so we begin at depth 1 and stop at the
+        # matching close.
+        depth = 1
+        end = len(self.rest)
+        for i, c in enumerate(self.rest):
+            if c == "(":
+                depth += 1
+            elif c == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        names = re.findall(r"%([\w\.\-]+)", self.rest[:end])
+        return names
+
+    def attr(self, key: str) -> Optional[str]:
+        m = re.search(rf"{key}=%?([\w\.\-]+)", self.rest)
+        return m.group(1) if m else None
+
+    def dims_attr(self, key: str) -> List[int]:
+        m = re.search(rf"{key}={{([\d,]*)}}", self.rest)
+        if not m or not m.group(1):
+            return []
+        return [int(x) for x in m.group(1).split(",")]
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    shapes: Dict[str, str]  # result name -> shape string
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    bytes_fused: float = 0.0
+    coll_bytes: float = 0.0
+    coll_counts: Dict[str, float] = dataclasses.field(default_factory=dict)
+    coll_bytes_by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+    unknown_trip_loops: int = 0
+
+    def add(self, other: "Cost", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.bytes_fused += other.bytes_fused * mult
+        self.coll_bytes += other.coll_bytes * mult
+        for k, v in other.coll_counts.items():
+            self.coll_counts[k] = self.coll_counts.get(k, 0) + v * mult
+        for k, v in other.coll_bytes_by_kind.items():
+            self.coll_bytes_by_kind[k] = (
+                self.coll_bytes_by_kind.get(k, 0) + v * mult
+            )
+        self.unknown_trip_loops += other.unknown_trip_loops
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if not line.strip():
+            continue
+        if not line.startswith(" "):
+            m = _COMP_RE.match(line)
+            if m:
+                cur = Computation(m.group(1), [], {})
+                comps[cur.name] = cur
+                if line.startswith("ENTRY"):
+                    entry = cur.name
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        instr = Instr(m.group(1), m.group(2), m.group(3), m.group(4))
+        cur.instrs.append(instr)
+        cur.shapes[instr.name] = instr.shape
+    return comps, entry
+
+
+def _dot_flops(instr: Instr, comp: Computation) -> float:
+    ops = instr.operand_names()
+    if len(ops) < 2:
+        return 0.0
+    lhs_shape = _shape_dims(comp.shapes.get(ops[0], ""))
+    if not lhs_shape:
+        return 0.0
+    lhs_batch = instr.dims_attr("lhs_batch_dims")
+    lhs_contract = instr.dims_attr("lhs_contracting_dims")
+    out_dims = _shape_dims(instr.shape)
+    batch = 1
+    for d in lhs_batch:
+        batch *= lhs_shape[d]
+    contract = 1
+    for d in lhs_contract:
+        contract *= lhs_shape[d]
+    out = 1
+    for d in out_dims:
+        out *= d
+    # out already includes batch dims; flops = 2 * out * contract
+    return 2.0 * out * contract
+
+
+def _trip_count(
+    cond: Computation, comps: Optional[Dict[str, Computation]] = None
+) -> Optional[int]:
+    """Recover the loop bound from compare(iter, constant) in the cond.
+
+    The compare is often fused (``fusion(..., calls=%wrapped_compare``), so
+    when no top-level compare resolves, fall back to the positive s32 scalar
+    constants visible in the cond (for scan loops the bound is the only
+    one), assuming the canonical ``i < N`` form."""
+    consts: Dict[str, int] = {}
+    for ins in cond.instrs:
+        if ins.opcode == "constant":
+            m = re.search(r"constant\((-?\d+)\)", "constant(" + ins.rest)
+            if m and ins.shape.strip().startswith("s32[]"):
+                consts[ins.name] = int(m.group(1))
+    for ins in cond.instrs:
+        if ins.opcode != "compare":
+            continue
+        direction = (re.search(r"direction=(\w+)", ins.rest) or [None, ""])[1]
+        for o in ins.operand_names():
+            if o in consts:
+                n = consts[o]
+                if direction == "LE":
+                    return max(n + 1, 0)
+                return max(n, 0)
+    positive = [v for v in consts.values() if v > 0]
+    if positive:
+        return max(positive)
+    return None
+
+
+def _comp_cost(
+    name: str,
+    comps: Dict[str, Computation],
+    cache: Dict[str, Cost],
+    fused_comps: set,
+    inside_fusion: bool,
+) -> Cost:
+    key = name + ("#f" if inside_fusion else "")
+    if key in cache:
+        return cache[key]
+    comp = comps[name]
+    cost = Cost()
+    for ins in comp.instrs:
+        if ins.opcode == "dot":
+            cost.flops += _dot_flops(ins, comp)
+        if not inside_fusion and ins.opcode not in _FREE_OPS:
+            b = shape_bytes(ins.shape)
+            for o in ins.operand_names():
+                if o in comp.shapes:
+                    b += shape_bytes(comp.shapes[o])
+            cost.bytes += b
+            if ins.opcode not in _ELEMENTWISE:
+                cost.bytes_fused += b
+        base = ins.opcode.replace("-start", "").replace("-done", "")
+        if base in _COLLECTIVES and not ins.opcode.endswith("-done"):
+            nb = shape_bytes(ins.shape)
+            # XLA:CPU promotes bf16 all-reduces to f32 ("*_promoted"
+            # reducers); TPU reduces in bf16 — charge the unpromoted width.
+            reducer = ins.attr("to_apply") or ""
+            if "promoted" in reducer:
+                nb = nb // 2
+            cost.coll_bytes += nb
+            cost.coll_counts[base] = cost.coll_counts.get(base, 0) + 1
+            cost.coll_bytes_by_kind[base] = (
+                cost.coll_bytes_by_kind.get(base, 0) + nb
+            )
+        # ---- called computations
+        if ins.opcode == "fusion":
+            called = ins.attr("calls")
+            if called and called in comps:
+                sub = _comp_cost(called, comps, cache, fused_comps, True)
+                # fusion internals: flops count, bytes/collectives don't
+                cost.flops += sub.flops
+        elif ins.opcode == "while":
+            body = ins.attr("body")
+            cond = ins.attr("condition")
+            trip = _trip_count(comps[cond], comps) if cond and cond in comps else None
+            if trip is None:
+                trip = 1
+                cost.unknown_trip_loops += 1
+            if body and body in comps:
+                cost.add(
+                    _comp_cost(body, comps, cache, fused_comps, inside_fusion),
+                    trip,
+                )
+            if cond and cond in comps:
+                cost.add(
+                    _comp_cost(cond, comps, cache, fused_comps, inside_fusion),
+                    trip,
+                )
+        elif ins.opcode == "conditional":
+            branches = re.search(r"branch_computations={([^}]*)}", ins.rest)
+            if branches:
+                names = re.findall(r"%([\w\.\-]+)", branches.group(1))
+                subs = [
+                    _comp_cost(n, comps, cache, fused_comps, inside_fusion)
+                    for n in names
+                    if n in comps
+                ]
+                if subs:
+                    best = max(subs, key=lambda c: c.flops + c.bytes)
+                    cost.add(best)
+        elif ins.opcode in ("call", "async-start"):
+            called = ins.attr("to_apply") or ins.attr("calls")
+            if called and called in comps:
+                cost.add(
+                    _comp_cost(called, comps, cache, fused_comps, inside_fusion)
+                )
+    cache[key] = cost
+    return cost
+
+
+def analyze_hlo(text: str) -> Cost:
+    comps, entry = parse_module(text)
+    if entry is None:
+        return Cost()
+    fused = set()
+    cache: Dict[str, Cost] = {}
+    return _comp_cost(entry, comps, cache, fused, False)

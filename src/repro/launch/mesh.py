@@ -1,0 +1,45 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run must set XLA_FLAGS before any jax initialization).
+
+    single-pod:  (data=16, model=16)            = 256 chips (one v5e pod)
+    multi-pod:   (pod=2, data=16, model=16)     = 512 chips
+
+``pod`` composes with ``data`` as the outer data-parallel axis; TP groups
+(``model``) stay inside an ICI torus.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)} — "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "BEFORE importing jax (launch/dryrun.py does this)"
+        )
+    import jax.experimental.mesh_utils as mesh_utils
+    from jax.sharding import Mesh
+
+    dev = np.asarray(devices[:n]).reshape(shape)
+    return Mesh(dev, axes)
+
+
+def make_test_mesh(data: int = 2, model: int = 2):
+    """Small mesh for CPU tests (requires >= data*model forced devices)."""
+    import jax
+    from jax.sharding import Mesh
+
+    n = data * model
+    dev = np.asarray(jax.devices()[:n]).reshape(data, model)
+    return Mesh(dev, ("data", "model"))

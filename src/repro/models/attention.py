@@ -1,0 +1,195 @@
+"""GQA attention: training/prefill (flash kernel) and decode (KV cache).
+
+Layouts
+-------
+activations     (b, s, d)
+q/k/v heads     (b, s, h, hd)  — kernel path transposes to (b, h, s, hd)
+KV cache        (b, S, kv, hd) — the SEQ dim is shardable over the model
+                axis for long-context decode (flash-decoding style: XLA
+                partial-reduces the softmax over the sharded S dim).
+
+KV heads are padded to the canonicalized count (cfg.n_kv_heads_padded) so the
+head dim always divides the TP degree; padding heads are exact replicas and
+the output projection folds them back (wo only reads the true heads' rows
+broadcast over the replication group — constructed at init).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.models.layers import apply_rope, rms_norm
+
+
+class AttnTemps(NamedTuple):
+    q: jnp.ndarray  # (b, s, hq, hd)
+    k: jnp.ndarray  # (b, s, kvp, hd)
+    v: jnp.ndarray  # (b, s, kvp, hd)
+
+
+def qkv_project(
+    x: jnp.ndarray,
+    params: dict,
+    positions: jnp.ndarray,
+    rope: str,
+    rope_theta: float,
+    partial_rotary: float,
+    qk_norm: bool,
+) -> AttnTemps:
+    from repro.dist.hints import hint
+
+    q = hint(jnp.einsum("bsd,dhk->bshk", x, params["wq"]), "dp", None, "tp", None)
+    k = hint(jnp.einsum("bsd,dhk->bshk", x, params["wk"]), "dp", None, "tp", None)
+    v = hint(jnp.einsum("bsd,dhk->bshk", x, params["wv"]), "dp", None, "tp", None)
+    if qk_norm:
+        q = rms_norm(q, params["q_norm"])
+        k = rms_norm(k, params["k_norm"])
+    q = _rope_heads(q, positions, rope_theta, rope, partial_rotary)
+    k = _rope_heads(k, positions, rope_theta, rope, partial_rotary)
+    return AttnTemps(q, k, v)
+
+
+def _rope_heads(x, positions, theta, mode, partial):
+    """x: (b, s, h, hd); positions: (b, s) or (s,)."""
+    if mode in ("none", "nope"):
+        return x
+    xt = x.swapaxes(1, 2)  # (b, h, s, hd)
+    pos = positions if positions.ndim == 2 else positions[None]
+    out = apply_rope(xt, pos[:, None, :], theta, mode, partial)
+    return out.swapaxes(1, 2)
+
+
+def attend_full(
+    t: AttnTemps,
+    causal: bool,
+    window: Optional[int],
+    params: dict,
+) -> jnp.ndarray:
+    """Training / prefill attention over the whole sequence."""
+    q = t.q.swapaxes(1, 2)  # (b, hq, s, hd)
+    k = t.k.swapaxes(1, 2)
+    v = t.v.swapaxes(1, 2)
+    o = kops.flash_attention(q, k, v, causal=causal, window=window)
+    o = o.swapaxes(1, 2)  # (b, s, hq, hd)
+    return jnp.einsum("bshk,hkd->bsd", o, params["wo"])
+
+
+def attend_cache(
+    x_q: jnp.ndarray,  # (b, 1, hq, hd) — new-token query (post-rope)
+    cache_k: jnp.ndarray,  # (b, S, kvp, hd)
+    cache_v: jnp.ndarray,  # (b, S, kvp, hd)
+    t_pos: jnp.ndarray,  # () int32 — number of valid cache positions
+    window: Optional[int],
+    params: dict,
+    k_scale: Optional[jnp.ndarray] = None,  # (b, S, kvp) int8-cache scales
+    v_scale: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """One-token decode over a (possibly seq-sharded) KV cache.
+
+    Written as a plain masked stable-softmax over the full cache S so the
+    SPMD partitioner turns the max/sum reductions into partial reductions +
+    all-reduce when S is sharded (flash-decoding without a hand-rolled
+    collective schedule).
+    """
+    b, _, hq, hd = x_q.shape
+    S, kvp = cache_k.shape[1], cache_k.shape[2]
+    # padded q heads beyond kv * group are zero-output heads (whisper's
+    # MHA zero-padding) — they attend to nothing; restore them as zeros.
+    group = max(hq // kvp, 1)
+    used_q = kvp * group
+    x_q = x_q[:, :, :used_q]
+    scale = 1.0 / (hd ** 0.5)
+    q = x_q[:, 0].reshape(b, kvp, group, hd)  # (b, kvp, g, hd)
+    kf = cache_k.astype(jnp.float32)
+    if k_scale is not None:  # int8 cache: dequant fuses into the dot
+        kf = kf * k_scale.astype(jnp.float32)[..., None]
+    logits = jnp.einsum(
+        "bkgd,bskd->bkgs", q.astype(jnp.float32), kf
+    ) * scale
+    k_pos = jnp.arange(S, dtype=jnp.int32)
+    mask = k_pos[None, None, None, :] < t_pos
+    if window is not None:
+        mask = mask & (k_pos[None, None, None, :] > t_pos - 1 - window)
+    logits = jnp.where(mask, logits, -jnp.inf)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    m = jnp.maximum(m, -1e30)  # no-visible-key guard
+    p = jnp.exp(logits - m)
+    p = jnp.where(mask, p, 0.0)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    p = p / jnp.maximum(denom, 1e-30)
+    vf = cache_v.astype(jnp.float32)
+    if v_scale is not None:
+        vf = vf * v_scale.astype(jnp.float32)[..., None]
+    o = jnp.einsum("bkgs,bskd->bkgd", p, vf)
+    o = o.reshape(b, 1, used_q, hd).astype(x_q.dtype)
+    if used_q < hq:
+        o = jnp.pad(o, ((0, 0), (0, 0), (0, hq - used_q), (0, 0)))
+    return jnp.einsum("bshk,hkd->bsd", o, params["wo"])
+
+
+def attend_cross(
+    x: jnp.ndarray,  # (b, s, d) decoder states
+    enc_kv: Tuple[jnp.ndarray, jnp.ndarray],  # (b, se, h, hd) each
+    params: dict,
+) -> jnp.ndarray:
+    """Encoder-decoder cross attention (whisper): non-causal over enc_kv."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"]).swapaxes(1, 2)
+    k, v = enc_kv
+    o = kops.flash_attention(
+        q, k.swapaxes(1, 2), v.swapaxes(1, 2), causal=False
+    ).swapaxes(1, 2)
+    return jnp.einsum("bshk,hkd->bsd", o, params["wo"])
+
+
+def slice_true_kv(k: jnp.ndarray, kv_true: int, mha: bool) -> jnp.ndarray:
+    """Strip padding kv heads before caching.  k: (b, s, kvp, hd).
+
+    MHA zero-padding -> the first kv_true heads are the real ones;
+    GQA replicate-padding (consecutive repeats) -> every r-th head.
+    """
+    kvp = k.shape[2]
+    if kvp == kv_true:
+        return k
+    if mha:
+        return k[:, :, :kv_true]
+    r = kvp // kv_true
+    return k[:, :, ::r]
+
+
+def update_cache(
+    cache_k: jnp.ndarray,
+    cache_v: jnp.ndarray,
+    new_k: jnp.ndarray,  # (b, 1, kvp, hd)
+    new_v: jnp.ndarray,
+    t_pos: jnp.ndarray,  # () int32
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    ck = jax.lax.dynamic_update_slice(
+        cache_k, new_k.astype(cache_k.dtype), (0, t_pos, 0, 0)
+    )
+    cv = jax.lax.dynamic_update_slice(
+        cache_v, new_v.astype(cache_v.dtype), (0, t_pos, 0, 0)
+    )
+    return ck, cv
+
+
+# ------------------------------------------------------------ int8 KV cache
+def quantize_kv(k: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-(token, head) symmetric int8 quantization.  k: (b, s, kv, hd).
+
+    Returns (int8 values, bf16 scales (b, s, kv)).  Halves decode HBM
+    traffic vs bf16; the dequant multiply fuses into the attention dots.
+    """
+    scale = jnp.max(jnp.abs(k.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(
+        jnp.round(k.astype(jnp.float32) / scale[..., None]), -127, 127
+    ).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def dequantize_kv(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale.astype(jnp.float32)[..., None]

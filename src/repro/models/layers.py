@@ -1,0 +1,122 @@
+"""Shared neural layers: norms, RoPE variants, MLPs, embeddings.
+
+Pure functions over parameter dicts (pytrees of jnp arrays).  Compute dtype
+is controlled by the caller (params are cast on entry to each block);
+normalization statistics and RoPE tables always run in float32.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ------------------------------------------------------------------- norms
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32)).astype(dtype)
+
+
+def layer_norm(
+    x: jnp.ndarray, weight: jnp.ndarray, bias: jnp.ndarray, eps: float = 1e-5
+) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+def apply_norm(x: jnp.ndarray, params: dict, kind: str) -> jnp.ndarray:
+    if kind == "rmsnorm":
+        return rms_norm(x, params["scale"])
+    return layer_norm(x, params["scale"], params["bias"])
+
+
+# -------------------------------------------------------------------- RoPE
+def rope_freqs(
+    hd: int, theta: float, rotary_dim: Optional[int] = None
+) -> jnp.ndarray:
+    """(rotary_dim/2,) inverse frequencies."""
+    rd = rotary_dim or hd
+    return 1.0 / (theta ** (jnp.arange(0, rd, 2, dtype=jnp.float32) / rd))
+
+
+def apply_rope(
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    theta: float = 10_000.0,
+    mode: str = "standard",
+    partial: float = 0.5,
+) -> jnp.ndarray:
+    """Rotary embedding.
+
+    x: (..., seq, hd); positions: broadcastable to (..., seq).
+    mode 'standard': rotate the full head dim (interleaved-pair convention).
+    mode 'partial':  rotate only the first ``partial * hd`` dims (chatglm's
+    2d-RoPE decoder form: half the head rotates, half passes through).
+    mode 'none':     identity here (the model adds a learned-position table).
+    mode 'nope':     identity (no positional encoding at all — jamba).
+    """
+    if mode in ("none", "nope"):
+        return x
+    hd = x.shape[-1]
+    rd = hd if mode == "standard" else int(hd * partial) // 2 * 2
+    freqs = rope_freqs(hd, theta, rd)  # (rd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, rd/2)
+    cos = jnp.cos(angles)
+    sin = jnp.sin(angles)
+    xr = x[..., :rd].astype(jnp.float32)
+    x1 = xr[..., 0::2]
+    x2 = xr[..., 1::2]
+    out1 = x1 * cos - x2 * sin
+    out2 = x2 * cos + x1 * sin
+    rotated = jnp.stack([out1, out2], axis=-1).reshape(xr.shape)
+    if rd == hd:
+        return rotated.astype(x.dtype)
+    return jnp.concatenate([rotated.astype(x.dtype), x[..., rd:]], axis=-1)
+
+
+# --------------------------------------------------------------------- MLPs
+def mlp(x: jnp.ndarray, params: dict, kind: str) -> jnp.ndarray:
+    """Position-wise MLP.  kinds: swiglu | sq_relu | gelu.
+
+    swiglu params:  wi (d, 2, f) fused gate+up, wo (f, d)
+    others params:  wi (d, f), wo (f, d)
+    """
+    if kind == "swiglu":
+        gate_up = jnp.einsum("...d,dtf->...tf", x, params["wi"])
+        gate, up = gate_up[..., 0, :], gate_up[..., 1, :]
+        h = jax.nn.silu(gate) * up
+    elif kind == "sq_relu":
+        h = jnp.einsum("...d,df->...f", x, params["wi"])
+        h = jnp.square(jax.nn.relu(h))
+    else:  # gelu
+        h = jnp.einsum("...d,df->...f", x, params["wi"])
+        h = jax.nn.gelu(h)
+    return jnp.einsum("...f,fd->...d", h, params["wo"])
+
+
+# --------------------------------------------------------------- embeddings
+def embed(tokens: jnp.ndarray, table: jnp.ndarray, compute_dtype) -> jnp.ndarray:
+    return jnp.take(table, tokens, axis=0).astype(compute_dtype)
+
+
+def unembed(x: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    """Logits in float32 (loss numerics), vocab-sharded over TP — the
+    (b, s, V) f32 buffer must never materialize replicated."""
+    from repro.dist.hints import hint
+
+    logits = jnp.einsum(
+        "...d,vd->...v", x.astype(jnp.float32), table.astype(jnp.float32)
+    )
+    if logits.ndim == 3:
+        return hint(logits, "dp", None, "tp")
+    return hint(logits, "dp", "tp")

@@ -1,0 +1,238 @@
+"""Parameter initialization for the architecture zoo.
+
+The tree layout is scan-friendly: every per-layer parameter is stacked over
+the pattern-unit dimension U (leading axis), so the layer stack lowers to a
+single `lax.scan` over units and the HLO stays one-unit-sized at any depth.
+
+``abstract_params`` builds the same tree as ShapeDtypeStructs via
+``jax.eval_shape`` — the dry-run path; nothing is allocated.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig, SSMConfig
+
+
+def _norm_params(cfg: ModelConfig, d: int, dtype):
+    p = {"scale": jnp.ones((d,), dtype)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def _stack_norm(cfg: ModelConfig, u: int, d: int, dtype):
+    p = {"scale": jnp.ones((u, d), dtype)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((u, d), dtype)
+    return p
+
+
+def _init(key, shape, dtype, fan_in):
+    scale = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def _attn_params(key, cfg: ModelConfig, u: int, dtype, cross: bool = False):
+    """Head padding preserves the model's math exactly:
+
+    * KV heads replicate-pad (``jnp.repeat`` consecutively): padded head j
+      is a copy of true head j // r, and the GQA q->kv group mapping under
+      the padded count reproduces the true grouping (DESIGN.md §4).
+    * Padded q heads (whisper's 20 -> 32) zero-init wq AND wo rows: they
+      attend to nothing and contribute nothing.
+    """
+    d, hd = cfg.d_model, cfg.hd
+    hq_true, kv_true = cfg.n_heads, cfg.n_kv_heads
+    hq = cfg.n_heads_padded or hq_true
+    kvp = cfg.n_kv_heads_padded or kv_true
+    ks = jax.random.split(key, 4)
+
+    wq = _init(ks[0], (u, d, hq_true, hd), dtype, d)
+    if hq > hq_true:
+        wq = jnp.concatenate(
+            [wq, jnp.zeros((u, d, hq - hq_true, hd), dtype)], axis=2
+        )
+    wk = _init(ks[1], (u, d, kv_true, hd), dtype, d)
+    wv = _init(ks[2], (u, d, kv_true, hd), dtype, d)
+    if kvp > kv_true:
+        if kv_true == hq_true:
+            # MHA (whisper 20 heads): zero-pad alongside the q heads — the
+            # padded kv heads are only read by padded (zero-output) q heads.
+            wk = jnp.concatenate(
+                [wk, jnp.zeros((u, d, kvp - kv_true, hd), dtype)], axis=2
+            )
+            wv = jnp.concatenate(
+                [wv, jnp.zeros((u, d, kvp - kv_true, hd), dtype)], axis=2
+            )
+        else:
+            assert kvp % kv_true == 0, (cfg.name, kvp, kv_true)
+            r = kvp // kv_true
+            wk = jnp.repeat(wk, r, axis=2)
+            wv = jnp.repeat(wv, r, axis=2)
+    wo = _init(ks[3], (u, hq_true, hd, d), dtype, hq_true * hd)
+    if hq > hq_true:
+        wo = jnp.concatenate(
+            [wo, jnp.zeros((u, hq - hq_true, hd, d), dtype)], axis=1
+        )
+    p = {"wq": wq, "wk": wk, "wv": wv, "wo": wo}
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = jnp.ones((u, hd), dtype)
+        p["k_norm"] = jnp.ones((u, hd), dtype)
+    return p
+
+
+def _mlp_params(key, cfg: ModelConfig, u: int, d_ff: int, dtype):
+    d = cfg.d_model
+    k1, k2 = jax.random.split(key)
+    if cfg.mlp == "swiglu":
+        return {
+            "wi": _init(k1, (u, d, 2, d_ff), dtype, d),
+            "wo": _init(k2, (u, d_ff, d), dtype, d_ff),
+        }
+    return {
+        "wi": _init(k1, (u, d, d_ff), dtype, d),
+        "wo": _init(k2, (u, d_ff, d), dtype, d_ff),
+    }
+
+
+def _moe_params(key, cfg: ModelConfig, u: int, dtype):
+    m = cfg.moe
+    d = cfg.d_model
+    e = m.n_experts_padded or m.n_experts
+    f = m.d_ff_expert
+    ks = jax.random.split(key, 5)
+    if cfg.mlp == "swiglu":
+        p = {
+            "we_i": _init(ks[0], (u, e, d, 2, f), dtype, d),
+            "we_o": _init(ks[1], (u, e, f, d), dtype, f),
+        }
+    else:
+        p = {
+            "we_i": _init(ks[0], (u, e, d, f), dtype, d),
+            "we_o": _init(ks[1], (u, e, f, d), dtype, f),
+        }
+    p["router"] = _init(ks[2], (u, d, e), jnp.float32, d)
+    if m.n_shared:
+        fs = f * m.n_shared
+        if cfg.mlp == "swiglu":
+            p["shared_wi"] = _init(ks[3], (u, d, 2, fs), dtype, d)
+        else:
+            p["shared_wi"] = _init(ks[3], (u, d, fs), dtype, d)
+        p["shared_wo"] = _init(ks[4], (u, fs, d), dtype, fs)
+    return p
+
+
+def _mamba_params(key, cfg: ModelConfig, u: int, dtype):
+    ssm = cfg.ssm or SSMConfig()
+    d = cfg.d_model
+    d_in = ssm.expand * d
+    r = ssm.dt_rank or -(-d // 16)
+    n = ssm.d_state
+    ks = jax.random.split(key, 6)
+    a_init = jnp.tile(
+        jnp.log(jnp.arange(1, n + 1, dtype=jnp.float32))[None, None, :], (u, d_in, 1)
+    )
+    return {
+        "in_proj": _init(ks[0], (u, d, 2, d_in), dtype, d),
+        "conv_w": _init(ks[1], (u, d_in, ssm.d_conv), dtype, ssm.d_conv),
+        "conv_b": jnp.zeros((u, d_in), dtype),
+        "x_proj": _init(ks[2], (u, d_in, r + 2 * n), dtype, d_in),
+        "dt_proj": _init(ks[3], (u, r, d_in), dtype, r),
+        "dt_bias": jnp.full((u, d_in), -4.0, dtype),  # softplus ~ 0.018
+        "A_log": a_init,  # float32
+        "D": jnp.ones((u, d_in), jnp.float32),
+        "out_proj": _init(ks[4], (u, d_in, d), dtype, d_in),
+    }
+
+
+def init_params(key, cfg: ModelConfig) -> Dict:
+    """Concrete parameter tree (smoke tests / examples)."""
+    dtype = jnp.bfloat16 if cfg.param_dtype == "bfloat16" else jnp.float32
+    u = cfg.n_units
+    vocab = cfg.vocab_padded or cfg.vocab_size
+    keys = iter(jax.random.split(key, 64))
+
+    params: Dict = {
+        "embed": _init(next(keys), (vocab, cfg.d_model), dtype, cfg.d_model),
+        "final_norm": _norm_params(cfg, cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = _init(
+            next(keys), (vocab, cfg.d_model), dtype, cfg.d_model
+        )
+    if cfg.rope == "none":
+        params["pos_embed"] = _init(
+            next(keys), (cfg.max_seq, cfg.d_model), dtype, cfg.d_model
+        )
+
+    units: Dict = {}
+    for i, blk in enumerate(cfg.pattern):
+        bp: Dict = {"pre_norm": _stack_norm(cfg, u, cfg.d_model, dtype)}
+        if blk.mixer == "attn":
+            bp["attn"] = _attn_params(next(keys), cfg, u, dtype)
+        else:
+            bp["mamba"] = _mamba_params(next(keys), cfg, u, dtype)
+        if blk.moe and cfg.moe is not None:
+            bp["post_norm"] = _stack_norm(cfg, u, cfg.d_model, dtype)
+            bp["moe"] = _moe_params(next(keys), cfg, u, dtype)
+        elif cfg.mlp != "none" and cfg.d_ff > 0:
+            bp["post_norm"] = _stack_norm(cfg, u, cfg.d_model, dtype)
+            bp["mlp"] = _mlp_params(next(keys), cfg, u, cfg.d_ff, dtype)
+        if cfg.enc_dec:
+            bp["cross_norm"] = _stack_norm(cfg, u, cfg.d_model, dtype)
+            bp["cross"] = _attn_params(next(keys), cfg, u, dtype, cross=True)
+        units[f"block_{i}"] = bp
+    params["units"] = units
+
+    if cfg.enc_dec:
+        eu = cfg.enc_layers
+        params["encoder"] = {
+            "pos_embed": _init(
+                next(keys), (cfg.enc_seq, cfg.d_model), dtype, cfg.d_model
+            ),
+            "units": {
+                "block_0": {
+                    "pre_norm": _stack_norm(cfg, eu, cfg.d_model, dtype),
+                    "attn": _attn_params(next(keys), cfg, eu, dtype),
+                    "post_norm": _stack_norm(cfg, eu, cfg.d_model, dtype),
+                    "mlp": _mlp_params(next(keys), cfg, eu, cfg.d_ff, dtype),
+                }
+            },
+            "final_norm": _norm_params(cfg, cfg.d_model, dtype),
+        }
+    return params
+
+
+def abstract_params(cfg: ModelConfig):
+    """ShapeDtypeStruct tree — dry-run path, no allocation."""
+    return jax.eval_shape(
+        partial(init_params, cfg=cfg), jax.random.key(0)
+    )
+
+
+# parameters whose numerics require float32 regardless of compute dtype
+_KEEP_F32 = {"router", "A_log", "D", "dt_bias"}
+
+
+def cast_params(params, cfg: ModelConfig):
+    """Mixed precision: bf16 compute copy of the float params (router and
+    SSM dynamics stay f32).  The f32 master copy is what the optimizer
+    updates; this cast happens once per step."""
+    if cfg.compute_dtype != "bfloat16":
+        return params
+    import jax.tree_util as jtu
+
+    def f(path, x):
+        key = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if x.dtype == jnp.float32 and key not in _KEEP_F32:
+            return x.astype(jnp.bfloat16)
+        return x
+
+    return jtu.tree_map_with_path(f, params)

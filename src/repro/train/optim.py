@@ -1,0 +1,151 @@
+"""Optimizers with shardable state: AdamW (fp32 or bf16 moments) and
+Adafactor (factored second moment — the 340B/398B single-pod fit option).
+
+State trees mirror the parameter tree, so the parameter PartitionSpecs apply
+verbatim (dist/sharding.opt_state_specs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"  # adamw | adamw_bf16 | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def lr_at(cfg: OptConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup + cosine decay."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = (step - cfg.warmup_steps) / jnp.maximum(
+        cfg.total_steps - cfg.warmup_steps, 1
+    )
+    prog = jnp.clip(prog, 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog)
+    )
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init_opt_state(params, cfg: OptConfig) -> Dict:
+    mdt = jnp.bfloat16 if cfg.name == "adamw_bf16" else jnp.float32
+    if cfg.name in ("adamw", "adamw_bf16"):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, mdt), params),
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, mdt), params),
+        }
+    if cfg.name == "adafactor":
+        def vr(p):
+            if p.ndim >= 2:
+                return jnp.zeros(p.shape[:-1], jnp.float32)
+            return jnp.zeros(p.shape, jnp.float32)
+
+        def vc(p):
+            if p.ndim >= 2:
+                return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return jnp.zeros((), jnp.float32)
+
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "vr": jax.tree.map(vr, params),
+            "vc": jax.tree.map(vc, params),
+        }
+    raise ValueError(cfg.name)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def apply_updates(params, grads, state: Dict, cfg: OptConfig):
+    """One optimizer step.  Returns (new_params, new_state, metrics)."""
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state["step"] + 1
+    lr = lr_at(cfg, step)
+
+    if cfg.name in ("adamw", "adamw_bf16"):
+        b1, b2 = cfg.b1, cfg.b2
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            m32 = m.astype(jnp.float32) * b1 + g * (1 - b1)
+            v32 = v.astype(jnp.float32) * b2 + jnp.square(g) * (1 - b2)
+            mhat = m32 / bc1
+            vhat = v32 / bc2
+            delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+            if p.ndim >= 2:  # decoupled weight decay on matrices only
+                delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+            newp = p.astype(jnp.float32) - lr * delta
+            return newp.astype(p.dtype), m32.astype(m.dtype), v32.astype(v.dtype)
+
+        flat_p, tree = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_m = jax.tree.leaves(state["m"])
+        flat_v = jax.tree.leaves(state["v"])
+        out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = jax.tree.unflatten(tree, [o[0] for o in out])
+        new_m = jax.tree.unflatten(tree, [o[1] for o in out])
+        new_v = jax.tree.unflatten(tree, [o[2] for o in out])
+        new_state = {"step": step, "m": new_m, "v": new_v}
+        return new_p, new_state, {"lr": lr, "grad_norm": gnorm}
+
+    # adafactor (factored v, no first moment, update clipping)
+    def upd(p, g, vr, vc):
+        g2 = jnp.square(g) + 1e-30
+        decay = 1.0 - (step.astype(jnp.float32) + 1.0) ** -0.8
+        if p.ndim >= 2:
+            vr2 = decay * vr + (1 - decay) * jnp.mean(g2, axis=-1)
+            vc2 = decay * vc + (1 - decay) * jnp.mean(g2, axis=-2)
+            denom = jnp.maximum(jnp.mean(vr2, axis=-1, keepdims=True), 1e-30)
+            vhat = (
+                vr2[..., :, None] * vc2[..., None, :] / denom[..., None]
+            )
+        else:
+            vr2 = decay * vr + (1 - decay) * g2
+            vc2 = vc
+            vhat = vr2
+        u = g / jnp.sqrt(vhat + 1e-30)
+        # update clipping (rms <= 1)
+        rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+        u = u / jnp.maximum(1.0, rms)
+        if p.ndim >= 2:
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * u
+        return newp.astype(p.dtype), vr2, vc2
+
+    flat_p, tree = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_vr = jax.tree.leaves(state["vr"])
+    flat_vc = jax.tree.leaves(state["vc"])
+    out = [upd(p, g, r, c) for p, g, r, c in zip(flat_p, flat_g, flat_vr, flat_vc)]
+    new_p = jax.tree.unflatten(tree, [o[0] for o in out])
+    new_vr = jax.tree.unflatten(tree, [o[1] for o in out])
+    new_vc = jax.tree.unflatten(tree, [o[2] for o in out])
+    new_state = {"step": step, "vr": new_vr, "vc": new_vc}
+    return new_p, new_state, {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,92 @@
+"""train_step / serve_step — the functions the dry-run lowers and the
+trainer executes.
+
+``make_train_step`` builds a donated, microbatched (gradient-accumulation)
+step: the global batch reshapes to (n_micro, mb, ...) and a ``lax.scan``
+accumulates gradients before one optimizer application.  Peak activation
+memory is one microbatch's remat stash; the accumulation buffer is the f32
+gradient tree (sharded like the params).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import decode_step, loss_fn
+from repro.train.optim import OptConfig, apply_updates
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: OptConfig,
+    n_micro: int = 1,
+    mamba_chunk: int = 128,
+) -> Callable:
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def micro_loss(params, micro_batch):
+        return loss_fn(params, cfg, micro_batch, mamba_chunk=mamba_chunk)
+
+    def train_step(params, opt_state, batch):
+        if n_micro == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                micro_loss, has_aux=True
+            )(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape(n_micro, x.shape[0] // n_micro, *x.shape[1:]),
+                batch,
+            )
+            # accumulate in f32 when masters are f32; bf16 masters (the
+            # 340B/398B single-pod fit path) accumulate in bf16 to halve the
+            # gradient buffer (documented tradeoff, DESIGN.md §2)
+            acc_dt = jax.tree.leaves(params)[0].dtype
+            grad_zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dt), params
+            )
+
+            def acc_body(carry, mb):
+                gacc, lacc = carry
+                (loss, _), grads = jax.value_and_grad(micro_loss, has_aux=True)(
+                    params, mb
+                )
+                gacc = jax.tree.map(
+                    lambda a, g: a + g.astype(a.dtype) / n_micro, gacc, grads
+                )
+                return (gacc, lacc + loss / n_micro), None
+
+            (grads, loss), _ = jax.lax.scan(
+                acc_body, (grad_zero, jnp.float32(0.0)), micro
+            )
+            metrics = {}
+        new_params, new_opt, opt_metrics = apply_updates(
+            params, grads, opt_state, opt_cfg
+        )
+        out = {"loss": loss, **opt_metrics}
+        return new_params, new_opt, out
+
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig) -> Callable:
+    """(params, cache, token) -> (next_token_logits, new_cache)."""
+
+    def serve_step(params, cache, token):
+        logits, new_cache = decode_step(params, cfg, cache, token)
+        return logits, new_cache
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig, s_max: int, mamba_chunk: int = 128) -> Callable:
+    from repro.models.transformer import prefill
+
+    def prefill_step(params, batch):
+        return prefill(params, cfg, batch, s_max=s_max, mamba_chunk=mamba_chunk)
+
+    return prefill_step

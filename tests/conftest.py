@@ -1,0 +1,86 @@
+"""Shared fixtures: the paper's running examples as Relations."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.constraints import FD, DC, Atom
+from repro.core.relation import Dictionary, make_relation
+
+
+# city codes used across the paper's examples
+CITY = Dictionary(["Los Angeles", "San Francisco", "New York"])
+LA, SF, NY = 0, 1, 2
+
+
+@pytest.fixture
+def cities_rel():
+    """Table 2a — the Cities dataset (dirty version).
+
+    row 0: 9001  Los Angeles
+    row 1: 9001  San Francisco   <- conflicts with 0, 2
+    row 2: 9001  Los Angeles
+    row 3: 10001 San Francisco   <- conflicts with 4
+    row 4: 10001 New York
+    """
+    return make_relation(
+        {
+            "zip": np.array([9001, 9001, 9001, 10001, 10001]),
+            "city": np.array([LA, SF, LA, SF, NY]),
+        },
+        overlay=["zip", "city"],
+        k=4,
+        rules=["zip_city"],
+    )
+
+
+@pytest.fixture
+def fd_zip_city():
+    return FD("zip_city", "zip", "city")
+
+
+@pytest.fixture
+def salary_rel():
+    """Example 4 — {salary, tax, age} rows t1, t2, t3."""
+    return make_relation(
+        {
+            "salary": np.array([1000.0, 3000.0, 2000.0], dtype=np.float32),
+            "tax": np.array([0.1, 0.2, 0.3], dtype=np.float32),
+            "age": np.array([31, 32, 43]),
+        },
+        overlay=["salary", "tax"],
+        k=4,
+        rules=["dc_sal_tax"],
+    )
+
+
+@pytest.fixture
+def dc_sal_tax():
+    """phi: forall t1,t2 NOT(t1.salary < t2.salary AND t1.tax > t2.tax)."""
+    return DC("dc_sal_tax", [Atom("salary", "<", "salary"), Atom("tax", ">", "tax")])
+
+
+@pytest.fixture
+def join_tables():
+    """Example 6 — Cities (C) and Employee (E) of Table 4a/4b."""
+    cities = make_relation(
+        {
+            "zip": np.array([9001, 9001, 10001]),
+            "city": np.array([LA, SF, SF]),
+        },
+        overlay=["zip", "city"],
+        k=4,
+        rules=["phi1"],
+    )
+    employee = make_relation(
+        {
+            "zip": np.array([9001, 10001, 10002]),
+            "name": np.array([0, 1, 2]),  # Peter, Mary, Jon
+            "phone": np.array([23456, 12345, 12345]),
+        },
+        overlay=["zip", "phone"],
+        k=4,
+        rules=["phi2"],
+    )
+    return {"cities": cities, "employee": employee}

@@ -1,0 +1,141 @@
+"""Per-architecture smoke tests: reduced same-family configs, one forward +
+one train-style grad step + a prefill->decode consistency probe, on CPU.
+
+Assert output shapes and no NaNs.  The FULL configs are exercised only via
+the dry-run (ShapeDtypeStructs, no allocation) — see launch/dryrun.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models.params import init_params
+from repro.models.transformer import (
+    decode_step,
+    forward,
+    init_cache,
+    loss_fn,
+    prefill,
+)
+
+B, S = 2, 32
+
+
+def make_batch(cfg, rng):
+    s_text = S - cfg.vis_tokens if cfg.frontend == "vision" else S
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, s_text))),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, s_text))),
+    }
+    if cfg.frontend == "vision":
+        batch["patch_embeds"] = jnp.asarray(
+            rng.standard_normal((B, cfg.vis_tokens, cfg.d_model)), jnp.float32
+        )
+    if cfg.frontend == "audio":
+        batch["enc_frames"] = jnp.asarray(
+            rng.standard_normal((B, cfg.enc_seq, cfg.d_model)), jnp.float32
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+class TestArchSmoke:
+    def test_forward_shapes_finite(self, arch):
+        cfg = get_config(arch, reduced=True).canonicalize(tp=2)
+        params = init_params(jax.random.key(0), cfg)
+        batch = make_batch(cfg, np.random.default_rng(0))
+        logits, aux = jax.jit(lambda p, b: forward(p, cfg, b, mamba_chunk=8))(
+            params, batch
+        )
+        vocab = cfg.vocab_padded or cfg.vocab_size
+        assert logits.shape == (B, S, vocab)
+        assert np.isfinite(np.asarray(logits)).all()
+        assert np.isfinite(float(aux))
+
+    def test_train_grad_step(self, arch):
+        cfg = get_config(arch, reduced=True).canonicalize(tp=2)
+        params = init_params(jax.random.key(1), cfg)
+        batch = make_batch(cfg, np.random.default_rng(1))
+
+        def step(p, b):
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: loss_fn(p, cfg, b, mamba_chunk=8), has_aux=True
+            )(p)
+            return loss, metrics, grads
+
+        loss, metrics, grads = jax.jit(step)(params, batch)
+        assert np.isfinite(float(loss))
+        gnorm = jnp.sqrt(
+            sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+        )
+        assert np.isfinite(float(gnorm)) and float(gnorm) > 0
+
+    def test_decode_step_shapes(self, arch):
+        cfg = get_config(arch, reduced=True).canonicalize(tp=2)
+        params = init_params(jax.random.key(2), cfg)
+        cache = init_cache(cfg, B, S, jnp.float32)
+        tok = jnp.zeros((B, 1), jnp.int32)
+        logits, cache2 = jax.jit(lambda p, c, t: decode_step(p, cfg, c, t))(
+            params, cache, tok
+        )
+        vocab = cfg.vocab_padded or cfg.vocab_size
+        assert logits.shape == (B, vocab)
+        assert np.isfinite(np.asarray(logits)).all()
+        assert int(cache2["t"]) == 1
+
+
+@pytest.mark.parametrize(
+    "arch", ["qwen3-4b", "gemma3-12b", "falcon-mamba-7b", "whisper-large-v3"]
+)
+def test_prefill_decode_matches_forward(arch):
+    """prefill(s tokens) then decode(token s) must equal forward(s+1 tokens)
+    at the last position — the KV cache/stream state is exact.  Run in f32
+    so the comparison is numerics-tight, not bf16-rounding-limited."""
+    import dataclasses
+
+    cfg = get_config(arch, reduced=True).canonicalize(tp=2)
+    cfg = dataclasses.replace(cfg, compute_dtype="float32")
+    params = init_params(jax.random.key(3), cfg)
+    rng = np.random.default_rng(3)
+    s = 16
+    toks = rng.integers(0, cfg.vocab_size, (B, s + 1))
+    batch_full = {"tokens": jnp.asarray(toks)}
+    batch_pre = {"tokens": jnp.asarray(toks[:, :s])}
+    if cfg.frontend == "audio":
+        frames = jnp.asarray(
+            rng.standard_normal((B, cfg.enc_seq, cfg.d_model)), jnp.float32
+        )
+        batch_full["enc_frames"] = frames
+        batch_pre["enc_frames"] = frames
+
+    logits_full, _ = jax.jit(lambda p, b: forward(p, cfg, b, mamba_chunk=8))(
+        params, batch_full
+    )
+    _, cache = jax.jit(
+        lambda p, b: prefill(p, cfg, b, s_max=s + 8, cache_dtype=jnp.float32,
+                             mamba_chunk=8)
+    )(params, batch_pre)
+    logits_dec, _ = jax.jit(lambda p, c, t: decode_step(p, cfg, c, t))(
+        params, cache, jnp.asarray(toks[:, s : s + 1])
+    )
+    np.testing.assert_allclose(
+        np.asarray(logits_dec),
+        np.asarray(logits_full[:, -1]),
+        atol=2e-3, rtol=2e-3,
+    )
+
+
+def test_param_count_matches_tree():
+    """config.param_count() agrees with the constructed tree (unpadded)."""
+    for arch in ("qwen3-4b", "olmoe-1b-7b", "falcon-mamba-7b"):
+        cfg = get_config(arch, reduced=True)
+        cfg_c = cfg.canonicalize(tp=1)  # tp=1: no padding
+        params = init_params(jax.random.key(0), cfg_c)
+        actual = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+        expected = cfg.param_count()
+        # allow small bookkeeping drift (norm biases etc.) but not layers
+        assert abs(actual - expected) / expected < 0.05, (
+            f"{arch}: tree {actual} vs param_count {expected}"
+        )

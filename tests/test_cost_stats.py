@@ -1,0 +1,130 @@
+"""Cost model (Inequality 1, §5.2) and Algorithm 2 statistics."""
+
+import numpy as np
+
+from repro.core.constraints import DC, FD, Atom
+from repro.core.cost import CostModel
+from repro.core.executor import Daisy, DaisyConfig
+from repro.core.operators import Pred, Query
+from repro.core.relation import make_relation
+from repro.core.stats import algorithm2_decide, dc_stats, fd_stats
+
+
+class TestCostModel:
+    def test_single_full_query_equals_offline(self):
+        """The paper's sanity check: q=1 accessing the whole dataset makes
+        the two sides equal (eps*n <= eps*n)."""
+        cm = CostModel(n=100, epsilon=10, p=2.0, df=100.0, expected_queries=1)
+        cm.record(q_i=100, e_i=0, d_i=100.0, eps_i=10)
+        assert not cm.should_switch_to_full()  # no remaining queries
+
+    def test_no_switch_with_cheap_queries(self):
+        """Few errors, nearly all already repaired: future updates are empty
+        deltas, so continuing incrementally beats a full-clean switch."""
+        cm = CostModel(n=10_000, epsilon=10, p=2.0, df=10_000.0, expected_queries=50)
+        for _ in range(5):
+            cm.record(q_i=200, e_i=5, d_i=205.0, eps_i=2)
+        assert not cm.should_switch_to_full()
+
+    def test_switch_with_expensive_updates(self):
+        """Fig. 9's regime: large candidate sets (p) make the per-query
+        update dominate, so the model flips to full cleaning."""
+        cm = CostModel(n=10_000, epsilon=5_000, p=200.0, df=10_000.0, expected_queries=90)
+        for _ in range(10):
+            cm.record(q_i=100, e_i=2_000, d_i=2_100.0, eps_i=400)
+        assert cm.should_switch_to_full()
+
+    def test_switch_only_once(self):
+        cm = CostModel(n=1_000, epsilon=900, p=50.0, df=1_000.0, expected_queries=50)
+        for _ in range(5):
+            cm.record(q_i=10, e_i=900, d_i=910.0, eps_i=150)
+        if cm.should_switch_to_full():
+            cm.mark_switched()
+            assert not cm.should_switch_to_full()
+
+    def test_incremental_cost_decreases_with_coverage(self):
+        """Relaxation cost shrinks as queries cover the dataset (n - sum q_j)."""
+        cm = CostModel(n=1_000, epsilon=10, p=2.0, df=1_000.0, expected_queries=10)
+        c1 = cm.incremental_query_cost(q_i=100, e_i=0, d_i=100.0, eps_i=0)
+        cm.record(q_i=500, e_i=0, d_i=500.0, eps_i=5)
+        c2 = cm.incremental_query_cost(q_i=100, e_i=0, d_i=100.0, eps_i=0)
+        assert c2 < c1
+
+
+class TestFDStats:
+    def test_dirty_rows_and_epsilon(self):
+        rel = make_relation(
+            {"a": np.array([1, 1, 2, 2, 3]), "b": np.array([5, 6, 7, 7, 9])},
+            overlay=["a", "b"],
+        )
+        st = fd_stats(rel, FD("r", "a", "b"))
+        np.testing.assert_array_equal(st.dirty_row, [True, True, False, False, False])
+        assert st.epsilon == 2
+        assert st.p_est == 2.0
+
+
+class TestAlgorithm2:
+    def _stats(self):
+        rng = np.random.default_rng(0)
+        sal = rng.uniform(1000, 5000, 256).astype(np.float32)
+        tax = rng.uniform(0.1, 0.5, 256).astype(np.float32)
+        rel = make_relation({"salary": sal, "tax": tax}, overlay=["salary", "tax"])
+        dc = DC("d", [Atom("salary", "<", "salary"), Atom("tax", ">", "tax")])
+        return dc_stats(rel, dc, p=16), sal
+
+    def test_estimate_errors_positive_for_random_data(self):
+        st, _ = self._stats()
+        # random (salary, tax) pairs produce inversions in most partitions
+        assert st.range_vio.sum() > 0
+        assert len(st.part_rows) == 16
+        assert st.part_rows.sum() == 256
+
+    def test_decision_narrow_query_high_accuracy(self):
+        st, sal = self._stats()
+        vals = sal[(sal >= 1000) & (sal <= 1100)]
+        dec = algorithm2_decide(st, vals, len(vals), 0, threshold=0.001)
+        assert 0 <= dec.accuracy <= 1
+        assert not dec.full_clean  # tiny threshold -> stay partial
+
+    def test_decision_low_accuracy_forces_full(self):
+        st, sal = self._stats()
+        vals = sal[:5]
+        dec = algorithm2_decide(st, vals, 5, 0, threshold=0.999)
+        # with a tiny answer and many estimated external errors, accuracy
+        # falls below the (extreme) threshold -> full cleaning (Fig. 12)
+        assert dec.full_clean
+
+    def test_support_grows_with_checked_partitions(self):
+        st, sal = self._stats()
+        d0 = algorithm2_decide(st, sal[:10], 10, 0, 0.5)
+        d1 = algorithm2_decide(st, sal[:10], 10, 5, 0.5)
+        assert d1.support > d0.support
+
+
+class TestCostModelIntegration:
+    def test_executor_switches_strategy(self):
+        """A workload with huge candidate sets triggers the mid-workload
+        switch (Fig. 9): later queries run in mode 'full' and afterwards the
+        whole relation is checked."""
+        rng = np.random.default_rng(1)
+        n = 512
+        # 128 disjoint dirty groups of 4 rows; b ranges don't overlap across
+        # groups, so each query's closure stays inside its group and errors
+        # keep arriving query after query (sustained update cost -> switch)
+        a = (np.arange(n) // 4).astype(np.int32)
+        b = (a * 100 + rng.integers(0, 90, n)).astype(np.int32)
+        rel = make_relation({"a": a, "b": b}, overlay=["a", "b"], k=8, rules=["r"])
+        daisy = Daisy(
+            {"t": rel},
+            {"t": [FD("r", "a", "b")]},
+            DaisyConfig(use_cost_model=True, expected_queries=40, k=8),
+        )
+        modes = []
+        for i in range(12):
+            res = daisy.execute(Query("t", preds=(Pred("a", "==", i),)))
+            modes.append(res.report.steps[0].mode)
+        assert "full" in modes, modes
+        # after the switch everything is checked -> later steps skip/no-op
+        from repro.core.update import unchecked
+
+        assert int(np.asarray(unchecked(daisy.db["t"], "r")).sum()) == 0

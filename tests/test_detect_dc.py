@@ -1,0 +1,119 @@
+"""General-DC detection + range repairs — paper §4.2, Example 4.
+
+phi: forall t1,t2 NOT(t1.salary < t2.salary AND t1.tax > t2.tax)
+rows: t1=(1000, 0.1, 31)  t2=(3000, 0.2, 32)  t3=(2000, 0.3, 43)
+The only violating ordered pair is (t1=t3, t2=t2row): 2000<3000 and 0.3>0.2.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.constraints import DC, Atom
+from repro.core.detect import detect_dc, dc_violation_count
+from repro.core.relation import CAND_GT, CAND_LT, CAND_VALUE, make_relation
+from repro.core.repair import dc_repair_candidates
+from repro.core.update import apply_candidates
+
+
+class TestDetectDC:
+    def test_example4_pair(self, salary_rel, dc_sal_tax):
+        det = detect_dc(salary_rel, dc_sal_tax, salary_rel.valid, salary_rel.valid)
+        # t3 (row 2) is the only t1-role violator; t2 (row 1) the only t2-role
+        np.testing.assert_array_equal(np.asarray(det.t1_count), [0, 0, 1])
+        np.testing.assert_array_equal(np.asarray(det.t2_count), [0, 1, 0])
+        assert int(dc_violation_count(det)) == 1
+        # extremal partner stats feeding the range fixes:
+        # t3's partner (role t1, atom salary '<'): max partner salary = 3000
+        assert np.asarray(det.t1_stat[0])[2] == 3000.0
+        # t3's partner tax (atom '>'): min partner tax = 0.2
+        np.testing.assert_allclose(np.asarray(det.t1_stat[1])[2], 0.2)
+        # t2row's partner (role t2): min partner salary 2000, max partner tax 0.3
+        assert np.asarray(det.t2_stat[0])[1] == 2000.0
+        np.testing.assert_allclose(np.asarray(det.t2_stat[1])[1], 0.3)
+
+    def test_row_scope_restricts_t1_role(self, salary_rel, dc_sal_tax):
+        scope = jnp.asarray(np.array([True, False, False]))
+        det = detect_dc(salary_rel, dc_sal_tax, scope, salary_rel.valid)
+        assert int(np.asarray(det.t1_count).sum()) == 0
+
+    def test_self_pair_excluded(self, dc_sal_tax):
+        rel = make_relation(
+            {
+                "salary": np.array([1000.0, 1000.0], dtype=np.float32),
+                "tax": np.array([0.3, 0.3], dtype=np.float32),
+                "age": np.array([30, 30]),
+            },
+            overlay=["salary", "tax"],
+        )
+        det = detect_dc(rel, dc_sal_tax, rel.valid, rel.valid)
+        assert int(dc_violation_count(det)) == 0
+
+    def test_three_atom_dc(self):
+        """phi2 of Example 4: adds t1.age < t2.age."""
+        rel = make_relation(
+            {
+                "salary": np.array([1000.0, 3000.0, 2000.0], dtype=np.float32),
+                "tax": np.array([0.1, 0.2, 0.3], dtype=np.float32),
+                "age": np.array([31.0, 32.0, 43.0], dtype=np.float32),
+            },
+            overlay=["salary", "tax", "age"],
+        )
+        dc2 = DC(
+            "phi2",
+            [Atom("salary", "<", "salary"), Atom("age", "<", "age"), Atom("tax", ">", "tax")],
+        )
+        det = detect_dc(rel, dc2, rel.valid, rel.valid)
+        # t3 vs t2: salary 2000<3000 ok, age 43<32 FALSE -> no violation
+        assert int(dc_violation_count(det)) == 0
+
+
+class TestDCRepairExample4:
+    def test_candidate_ranges(self, salary_rel, dc_sal_tax):
+        det = detect_dc(salary_rel, dc_sal_tax, salary_rel.valid, salary_rel.valid)
+        deltas = dc_repair_candidates(salary_rel, dc_sal_tax, det, salary_rel.valid)
+        rel = apply_candidates(salary_rel, deltas)
+
+        # --- t2row (row 1) fixes, exactly Example 4's candidates:
+        # salary: {3000 (orig) 50%, <2000 50%}
+        sv = np.asarray(rel.cand["salary"])[1]
+        sc = np.asarray(rel.ccount["salary"])[1]
+        sk = np.asarray(rel.ckind["salary"])[1]
+        live = {(float(v), int(k)) for v, c, k in zip(sv, sc, sk) if c > 0}
+        assert (3000.0, int(CAND_VALUE)) in live
+        assert (2000.0, int(CAND_LT)) in live
+        p = np.asarray(rel.probs("salary"))[1]
+        np.testing.assert_allclose(p[sc > 0], 0.5, atol=1e-6)
+
+        # tax: {0.2 (orig) 50%, >0.3 50%}
+        tv = np.asarray(rel.cand["tax"])[1]
+        tc = np.asarray(rel.ccount["tax"])[1]
+        tk = np.asarray(rel.ckind["tax"])[1]
+        live = {(round(float(v), 4), int(k)) for v, c, k in zip(tv, tc, tk) if c > 0}
+        assert (0.2, int(CAND_VALUE)) in live
+        assert (0.3, int(CAND_GT)) in live
+
+        # --- t3 (row 2) symmetric fixes: salary {2000, >3000}, tax {0.3, <0.2}
+        sv = np.asarray(rel.cand["salary"])[2]
+        sc = np.asarray(rel.ccount["salary"])[2]
+        sk = np.asarray(rel.ckind["salary"])[2]
+        live = {(float(v), int(k)) for v, c, k in zip(sv, sc, sk) if c > 0}
+        assert (2000.0, int(CAND_VALUE)) in live
+        assert (3000.0, int(CAND_GT)) in live
+
+        # --- t1 (row 0) untouched
+        assert not np.asarray(rel.is_uncertain("salary"))[0]
+        assert not np.asarray(rel.is_uncertain("tax"))[0]
+
+    def test_range_candidates_qualify_filters(self, salary_rel, dc_sal_tax):
+        """Possible-world semantics: the (bound, inf) candidate makes a
+        range filter qualify (paper §4: a tuple qualifies iff >= 1 candidate
+        qualifies)."""
+        det = detect_dc(salary_rel, dc_sal_tax, salary_rel.valid, salary_rel.valid)
+        deltas = dc_repair_candidates(salary_rel, dc_sal_tax, det, salary_rel.valid)
+        rel = apply_candidates(salary_rel, deltas)
+        # t2row's tax candidate (0.3, +inf) overlaps tax > 0.5
+        m = np.asarray(rel.candidate_matches("tax", ">", 0.5))
+        assert m[1] and not m[0]
+        # t3's salary candidate (3000, +inf) overlaps salary >= 5000
+        m = np.asarray(rel.candidate_matches("salary", ">=", 5000.0))
+        assert m[2] and not m[0] and not m[1]

@@ -1,0 +1,125 @@
+"""FD detection + probabilistic repair — paper §4.1, Example 2 / Table 2b.
+
+Candidate probabilities are frequency-based: P(rhs|lhs) and P(lhs|rhs).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.detect import detect_fd
+from repro.core.repair import fd_repair_candidates, repaired_value
+from repro.core.update import apply_candidates, mark_checked, unchecked
+from tests.conftest import LA, NY, SF
+
+
+def probs_for(rel, attr, row):
+    """{value: prob} for a row's candidate overlay (concrete values only)."""
+    vals = np.asarray(rel.cand[attr])[row]
+    ps = np.asarray(rel.probs(attr))[row]
+    return {int(v): float(p) for v, p in zip(vals, ps) if p > 0}
+
+
+class TestDetectFD:
+    def test_violated_groups(self, cities_rel, fd_zip_city):
+        det = detect_fd(cities_rel, fd_zip_city, cities_rel.valid)
+        # both zip groups contain two distinct cities
+        np.testing.assert_array_equal(
+            np.asarray(det.violated), [True, True, True, True, True]
+        )
+        assert not bool(det.overflow)
+
+    def test_scoped_detection(self, cities_rel, fd_zip_city):
+        scope = jnp.asarray(np.array([True, True, True, False, False]))
+        det = detect_fd(cities_rel, fd_zip_city, scope)
+        np.testing.assert_array_equal(
+            np.asarray(det.violated), [True, True, True, False, False]
+        )
+
+    def test_rhs_candidate_frequencies(self, cities_rel, fd_zip_city):
+        """P(City|Zip=9001) = {LA 2/3, SF 1/3} — Table 2b's 67%/33%."""
+        det = detect_fd(cities_rel, fd_zip_city, cities_rel.valid)
+        cand = np.asarray(det.rhs_cand)[0]
+        count = np.asarray(det.rhs_count)[0]
+        got = {int(v): float(c) for v, c in zip(cand, count) if c > 0}
+        assert got == {LA: 2.0, SF: 1.0}
+
+    def test_lhs_candidate_frequencies(self, cities_rel, fd_zip_city):
+        """P(Zip|City=SF) = {9001 50%, 10001 50%} — Table 2b row 2's pair."""
+        det = detect_fd(cities_rel, fd_zip_city, cities_rel.valid)
+        cand = np.asarray(det.lhs_cand)[1]  # row 1 = (9001, SF)
+        count = np.asarray(det.lhs_count)[1]
+        got = {int(v): float(c) for v, c in zip(cand, count) if c > 0}
+        assert got == {9001: 1.0, 10001: 1.0}
+
+    def test_clean_relation_no_violations(self, fd_zip_city):
+        from repro.core.relation import make_relation
+
+        rel = make_relation(
+            {"zip": np.array([1, 1, 2]), "city": np.array([LA, LA, NY])},
+            overlay=["zip", "city"],
+        )
+        det = detect_fd(rel, fd_zip_city, rel.valid)
+        assert not np.asarray(det.violated).any()
+
+
+class TestRepairTable2b:
+    def test_probabilistic_update(self, cities_rel, fd_zip_city):
+        """After repairing the 9001 cluster the overlay matches Table 2b."""
+        scope = jnp.asarray(np.array([True, True, True, False, False]))
+        det = detect_fd(cities_rel, fd_zip_city, scope)
+        deltas = fd_repair_candidates(cities_rel, fd_zip_city, det, scope)
+        rel = apply_candidates(cities_rel, deltas)
+
+        # rows 0..2 City candidates: {LA 67%, SF 33%}
+        for row in (0, 1, 2):
+            got = probs_for(rel, "city", row)
+            assert got.keys() == {LA, SF}
+            np.testing.assert_allclose(got[LA], 2 / 3, atol=1e-6)
+            np.testing.assert_allclose(got[SF], 1 / 3, atol=1e-6)
+        # rows 0..2 Zip candidates: P(Zip|City) within the scope
+        got = probs_for(rel, "zip", 1)  # City=SF within scope -> only 9001
+        assert got == {9001: 1.0}
+        # untouched rows keep empty overlays
+        assert not np.asarray(rel.is_uncertain("city"))[3:].any()
+
+    def test_full_scope_matches_table2b_lhs_pair(self, cities_rel, fd_zip_city):
+        """With the full closure scope (all 5 rows — see planner.py note),
+        row 1's Zip candidates are Table 2b's {9001 50%, 10001 50%}."""
+        det = detect_fd(cities_rel, fd_zip_city, cities_rel.valid)
+        deltas = fd_repair_candidates(cities_rel, fd_zip_city, det, cities_rel.valid)
+        rel = apply_candidates(cities_rel, deltas)
+        got = probs_for(rel, "zip", 1)
+        assert got.keys() == {9001, 10001}
+        np.testing.assert_allclose(got[9001], 0.5, atol=1e-6)
+        np.testing.assert_allclose(got[10001], 0.5, atol=1e-6)
+        # Table 3's 10001 rows: City candidates {SF 50%, NY 50%}
+        got = probs_for(rel, "city", 3)
+        assert got.keys() == {SF, NY}
+        np.testing.assert_allclose(got[SF], 0.5, atol=1e-6)
+
+    def test_repaired_value_majority(self, cities_rel, fd_zip_city):
+        det = detect_fd(cities_rel, fd_zip_city, cities_rel.valid)
+        deltas = fd_repair_candidates(cities_rel, fd_zip_city, det, cities_rel.valid)
+        rel = apply_candidates(cities_rel, deltas)
+        fixed = np.asarray(repaired_value(rel, "city"))
+        # majority fix for the 9001 group is LA (2 vs 1)
+        assert fixed[1] == LA
+
+
+class TestCheckedFlags:
+    def test_mark_and_query(self, cities_rel):
+        scope = jnp.asarray(np.array([True, False, True, False, False]))
+        rel = mark_checked(cities_rel, "zip_city", scope)
+        np.testing.assert_array_equal(
+            np.asarray(unchecked(rel, "zip_city")), [False, True, False, True, True]
+        )
+        # marking accumulates
+        rel = mark_checked(rel, "zip_city", jnp.asarray(np.array([False, True, False, False, False])))
+        np.testing.assert_array_equal(
+            np.asarray(unchecked(rel, "zip_city")), [False, False, False, True, True]
+        )
+
+    def test_unknown_rule_all_unchecked(self, cities_rel):
+        np.testing.assert_array_equal(
+            np.asarray(unchecked(cities_rel, "nope")), np.asarray(cities_rel.valid)
+        )

@@ -1,0 +1,109 @@
+"""clean_join — paper §4.4, Example 6 / Table 4.
+
+Cities C: t1=(9001, LA)  t2=(9001, SF)  t3=(10001, SF)     rule phi1: Zip->City
+Employee E: (9001, Peter, 23456) (10001, Mary, 12345) (10002, Jon, 12345)
+                                                           rule phi2: Phone->Zip
+Query: sigma(City=LA)(C) |x|_Zip E.
+
+Expected (Table 4e): 4 qualifying pairs —
+  (t1, Peter), (t2, Peter), (t2, Mary), (t2, Jon)
+(t2 zip becomes {9001 50%, 10001 50%}; Mary/Jon zips become
+{10001 50%, 10002 50%} after phi2, so Jon overlaps t2 at 10001).
+"""
+
+import numpy as np
+
+from repro.core.constraints import FD
+from repro.core.executor import Daisy, DaisyConfig
+from repro.core.operators import JoinClause, Pred, Query
+from tests.conftest import LA, SF
+
+
+def make_engine(join_tables):
+    rules = {
+        "cities": [FD("phi1", "zip", "city")],
+        "employee": [FD("phi2", "phone", "zip")],
+    }
+    cfg = DaisyConfig(join_capacity=64, use_cost_model=False)
+    return Daisy(join_tables, rules, cfg)
+
+
+def result_pairs(daisy, res):
+    li = np.asarray(res.join.rows["cities"])
+    ri = np.asarray(res.join.rows["employee"])
+    v = np.asarray(res.join.valid)
+    return {(int(a), int(b)) for a, b, ok in zip(li, ri, v) if ok}
+
+
+class TestExample6:
+    def test_table4e_pairs(self, join_tables):
+        daisy = make_engine(join_tables)
+        q = Query(
+            table="cities",
+            preds=(Pred("city", "==", LA),),
+            project=("name", "zip"),
+            joins=(JoinClause(right="employee", left_on="zip", right_on="zip"),),
+        )
+        res = daisy.execute(q)
+        assert result_pairs(daisy, res) == {(0, 0), (1, 0), (1, 1), (1, 2)}
+        assert not res.report.join_overflow
+
+    def test_table4d_relaxed_select(self, join_tables):
+        """After clean_sigma, t2's zip is {9001 50%, 10001 50%} (Table 4d)."""
+        daisy = make_engine(join_tables)
+        q = Query(
+            table="cities",
+            preds=(Pred("city", "==", LA),),
+            project=("name", "zip"),
+            joins=(JoinClause(right="employee", left_on="zip", right_on="zip"),),
+        )
+        daisy.execute(q)
+        rel = daisy.db["cities"]
+        probs = np.asarray(rel.probs("zip"))[1]
+        vals = np.asarray(rel.cand["zip"])[1]
+        got = {int(v): round(float(p), 3) for v, p in zip(vals, probs) if p > 0}
+        assert got == {9001: 0.5, 10001: 0.5}
+
+    def test_phi2_repairs_employee(self, join_tables):
+        daisy = make_engine(join_tables)
+        q = Query(
+            table="cities",
+            preds=(Pred("city", "==", LA),),
+            joins=(JoinClause(right="employee", left_on="zip", right_on="zip"),),
+        )
+        daisy.execute(q)
+        rel = daisy.db["employee"]
+        for row in (1, 2):  # Mary, Jon
+            probs = np.asarray(rel.probs("zip"))[row]
+            vals = np.asarray(rel.cand["zip"])[row]
+            got = {int(v): round(float(p), 3) for v, p in zip(vals, probs) if p > 0}
+            assert got == {10001: 0.5, 10002: 0.5}
+
+    def test_lemma5_no_new_violations(self, join_tables):
+        """Def 3(d) re-check: the stitched result contains no unchecked
+        violations (Lemma 5)."""
+        daisy = make_engine(join_tables)
+        q = Query(
+            table="cities",
+            preds=(Pred("city", "==", LA),),
+            joins=(JoinClause(right="employee", left_on="zip", right_on="zip"),),
+        )
+        res = daisy.execute(q)
+        assert res.report.recheck_violations == 0
+
+    def test_join_groupby(self, join_tables):
+        daisy = make_engine(join_tables)
+        q = Query(
+            table="cities",
+            preds=(Pred("city", "==", LA),),
+            joins=(JoinClause(right="employee", left_on="zip", right_on="zip"),),
+            groupby=__import__("repro.core.operators", fromlist=["GroupBySpec"]).GroupBySpec(
+                keys=("name",), agg="count", table="employee"
+            ),
+        )
+        res = daisy.execute(q)
+        counts = np.asarray(res.groups["count"])
+        keys = np.asarray(res.groups["key_name"])
+        got = {int(k): float(c) for k, c in zip(keys, counts) if c > 0}
+        # Peter appears in 2 pairs, Mary and Jon in 1 each
+        assert got == {0: 2.0, 1: 1.0, 2: 1.0}

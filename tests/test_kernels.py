@@ -1,0 +1,175 @@
+"""Pallas kernel validation: interpret-mode kernel vs pure-jnp oracle.
+
+Every kernel sweeps shapes/dtypes and asserts allclose against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.dc_pairs import dc_role_scan_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.semijoin import semijoin_pallas
+
+SETTINGS = dict(max_examples=10, deadline=None)
+
+
+# ------------------------------------------------------------------ dc_pairs
+class TestDCPairsKernel:
+    @pytest.mark.parametrize("n", [7, 64, 130, 300])
+    @pytest.mark.parametrize("block", [64, 128])
+    def test_matches_ref_int(self, n, block):
+        rng = np.random.default_rng(n)
+        a = jnp.asarray(rng.integers(0, 50, n).astype(np.int32))
+        b = jnp.asarray(rng.integers(0, 50, n).astype(np.int32))
+        rs = jnp.asarray(rng.random(n) < 0.7)
+        cs = jnp.asarray(rng.random(n) < 0.7)
+        args = ([a, b], [a, b], ["<", ">"], rs, cs, ["max", "min"])
+        c_ref, s_ref = ref.dc_role_scan(*args, block=block)
+        c_pal, s_pal = dc_role_scan_pallas(*args, block=block, interpret=True)
+        np.testing.assert_array_equal(np.asarray(c_ref), np.asarray(c_pal))
+        for r, p in zip(s_ref, s_pal):
+            np.testing.assert_array_equal(np.asarray(r), np.asarray(p))
+
+    @pytest.mark.parametrize("ops", [["<"], ["<=", ">="], ["==", "!="]])
+    def test_op_sweep_float(self, ops):
+        rng = np.random.default_rng(3)
+        n = 96
+        cols = [jnp.asarray(rng.uniform(0, 10, n).astype(np.float32)) for _ in ops]
+        rs = jnp.asarray(np.ones(n, bool))
+        cs = jnp.asarray(np.ones(n, bool))
+        reduces = ["max" if o in ("<", "<=") else "min" for o in ops]
+        args = (cols, cols, ops, rs, cs, reduces)
+        c_ref, s_ref = ref.dc_role_scan(*args, block=32)
+        c_pal, s_pal = dc_role_scan_pallas(*args, block=32, interpret=True)
+        np.testing.assert_array_equal(np.asarray(c_ref), np.asarray(c_pal))
+        for r, p in zip(s_ref, s_pal):
+            np.testing.assert_allclose(np.asarray(r), np.asarray(p))
+
+    def test_count_matches_brute_force(self):
+        rng = np.random.default_rng(9)
+        n = 48
+        a = rng.integers(0, 20, n).astype(np.int32)
+        b = rng.integers(0, 20, n).astype(np.int32)
+        count, _ = ref.dc_role_scan(
+            [jnp.asarray(a), jnp.asarray(b)],
+            [jnp.asarray(a), jnp.asarray(b)],
+            ["<", ">"],
+            jnp.ones(n, bool),
+            jnp.ones(n, bool),
+            ["max", "min"],
+            block=16,
+        )
+        expect = np.zeros(n, np.int32)
+        for i in range(n):
+            for j in range(n):
+                if i != j and a[i] < a[j] and b[i] > b[j]:
+                    expect[i] += 1
+        np.testing.assert_array_equal(np.asarray(count), expect)
+
+    @given(st.integers(4, 80), st.integers(0, 2**31 - 1))
+    @settings(**SETTINGS)
+    def test_property_random(self, n, seed):
+        rng = np.random.default_rng(seed)
+        a = jnp.asarray(rng.integers(0, 8, n).astype(np.int32))
+        rs = jnp.asarray(rng.random(n) < 0.5)
+        cs = jnp.asarray(rng.random(n) < 0.5)
+        args = ([a], [a], ["<"], rs, cs, ["max"])
+        c_ref, s_ref = ref.dc_role_scan(*args, block=32)
+        c_pal, s_pal = dc_role_scan_pallas(*args, block=32, interpret=True)
+        np.testing.assert_array_equal(np.asarray(c_ref), np.asarray(c_pal))
+        np.testing.assert_array_equal(np.asarray(s_ref[0]), np.asarray(s_pal[0]))
+
+
+# ------------------------------------------------------------------ semijoin
+class TestSemijoinKernel:
+    @pytest.mark.parametrize("n,m", [(5, 7), (64, 64), (100, 257), (513, 100)])
+    @pytest.mark.parametrize("block", [64, 256])
+    def test_matches_ref(self, n, m, block):
+        rng = np.random.default_rng(n * m)
+        q = jnp.asarray(rng.integers(0, 40, n).astype(np.int32))
+        k = jnp.asarray(rng.integers(0, 40, m).astype(np.int32))
+        qm = jnp.asarray(rng.random(n) < 0.8)
+        km = jnp.asarray(rng.random(m) < 0.8)
+        r = ref.semijoin(q, qm, k, km, block=block)
+        p = semijoin_pallas(q, qm, k, km, block=block, interpret=True)
+        np.testing.assert_array_equal(np.asarray(r), np.asarray(p))
+
+    def test_matches_numpy(self):
+        rng = np.random.default_rng(0)
+        q = rng.integers(0, 10, 50).astype(np.int32)
+        k = rng.integers(0, 10, 30).astype(np.int32)
+        km = rng.random(30) < 0.5
+        got = ref.semijoin(
+            jnp.asarray(q), jnp.ones(50, bool), jnp.asarray(k), jnp.asarray(km)
+        )
+        np.testing.assert_array_equal(np.asarray(got), np.isin(q, k[km]))
+
+    def test_empty_key_set(self):
+        q = jnp.arange(10, dtype=jnp.int32)
+        k = jnp.arange(10, dtype=jnp.int32)
+        got = semijoin_pallas(
+            q, jnp.ones(10, bool), k, jnp.zeros(10, bool), interpret=True
+        )
+        assert not np.asarray(got).any()
+
+
+# ----------------------------------------------------------- flash attention
+class TestFlashAttention:
+    @pytest.mark.parametrize("hq,hkv", [(4, 4), (4, 2), (8, 1)])
+    @pytest.mark.parametrize("sq,sk", [(128, 128), (256, 256)])
+    def test_causal_matches_ref(self, hq, hkv, sq, sk):
+        rng = np.random.default_rng(hq * sq)
+        d = 64
+        q = jnp.asarray(rng.standard_normal((2, hq, sq, d)).astype(np.float32))
+        k = jnp.asarray(rng.standard_normal((2, hkv, sk, d)).astype(np.float32))
+        v = jnp.asarray(rng.standard_normal((2, hkv, sk, d)).astype(np.float32))
+        r = ref.attention(q, k, v, causal=True)
+        p = flash_attention_pallas(q, k, v, causal=True, block_q=64, block_kv=64,
+                                   interpret=True)
+        np.testing.assert_allclose(np.asarray(r), np.asarray(p), atol=2e-5, rtol=2e-5)
+
+    def test_sliding_window(self):
+        rng = np.random.default_rng(5)
+        q = jnp.asarray(rng.standard_normal((1, 2, 256, 32)).astype(np.float32))
+        k = jnp.asarray(rng.standard_normal((1, 2, 256, 32)).astype(np.float32))
+        v = jnp.asarray(rng.standard_normal((1, 2, 256, 32)).astype(np.float32))
+        r = ref.attention(q, k, v, causal=True, window=64)
+        p = flash_attention_pallas(
+            q, k, v, causal=True, window=64, block_q=64, block_kv=64, interpret=True
+        )
+        np.testing.assert_allclose(np.asarray(r), np.asarray(p), atol=2e-5, rtol=2e-5)
+
+    def test_noncausal(self):
+        rng = np.random.default_rng(6)
+        q = jnp.asarray(rng.standard_normal((1, 2, 128, 32)).astype(np.float32))
+        k = jnp.asarray(rng.standard_normal((1, 2, 128, 32)).astype(np.float32))
+        v = jnp.asarray(rng.standard_normal((1, 2, 128, 32)).astype(np.float32))
+        r = ref.attention(q, k, v, causal=False)
+        p = flash_attention_pallas(q, k, v, causal=False, block_q=64, block_kv=64,
+                                   interpret=True)
+        np.testing.assert_allclose(np.asarray(r), np.asarray(p), atol=2e-5, rtol=2e-5)
+
+    def test_bf16_io(self):
+        rng = np.random.default_rng(7)
+        q = jnp.asarray(rng.standard_normal((1, 2, 128, 64))).astype(jnp.bfloat16)
+        k = jnp.asarray(rng.standard_normal((1, 2, 128, 64))).astype(jnp.bfloat16)
+        v = jnp.asarray(rng.standard_normal((1, 2, 128, 64))).astype(jnp.bfloat16)
+        r = ref.attention(q, k, v, causal=True)
+        p = flash_attention_pallas(q, k, v, causal=True, block_q=64, block_kv=64,
+                                   interpret=True)
+        np.testing.assert_allclose(
+            np.asarray(r, np.float32), np.asarray(p, np.float32), atol=3e-2
+        )
+
+    def test_softmax_rows_sum_to_one_effect(self):
+        """Uniform V must pass through attention unchanged."""
+        q = jnp.ones((1, 1, 128, 32), jnp.float32)
+        k = jnp.ones((1, 1, 128, 32), jnp.float32)
+        v = jnp.full((1, 1, 128, 32), 3.0, jnp.float32)
+        p = flash_attention_pallas(q, k, v, causal=True, block_q=64, block_kv=64,
+                                   interpret=True)
+        np.testing.assert_allclose(np.asarray(p), 3.0, rtol=1e-6)

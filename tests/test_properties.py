@@ -1,0 +1,209 @@
+"""Property-based tests (hypothesis) for the system's invariants.
+
+* Lemma 4: the candidate merge is commutative & associative.
+* Relaxation: monotone, idempotent at the fixpoint, never reaches invalid
+  rows, converges within the logarithmic bound.
+* Possible-world filters: candidate qualification is a superset of the
+  certain (primary-value) qualification for rows with overlays.
+* group_distinct_candidates: counts sum to the group size.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.constraints import FD
+from repro.core.relation import make_relation
+from repro.core.relax import default_max_iters, relax_fd
+from repro.core.setops import group_distinct_candidates, member_in
+from repro.core.update import merge_candidates
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@st.composite
+def small_relation(draw):
+    n = draw(st.integers(2, 24))
+    a = draw(st.lists(st.integers(0, 5), min_size=n, max_size=n))
+    b = draw(st.lists(st.integers(0, 5), min_size=n, max_size=n))
+    rel = make_relation(
+        {"a": np.array(a, np.int32), "b": np.array(b, np.int32)},
+        overlay=["a", "b"],
+        k=8,
+    )
+    mask = draw(st.lists(st.booleans(), min_size=n, max_size=n))
+    return rel, jnp.asarray(np.array(mask))
+
+
+@st.composite
+def cand_sets(draw):
+    rows = draw(st.integers(1, 6))
+    k = draw(st.integers(1, 4))
+
+    def one():
+        vals = draw(
+            st.lists(
+                st.integers(0, 3), min_size=rows * k, max_size=rows * k
+            )
+        )
+        cnts = draw(
+            st.lists(
+                st.integers(0, 3), min_size=rows * k, max_size=rows * k
+            )
+        )
+        v = jnp.asarray(np.array(vals, np.int32).reshape(rows, k))
+        c = jnp.asarray(np.array(cnts, np.float32).reshape(rows, k))
+        kk = jnp.zeros((rows, k), jnp.int8)
+        return v, c, kk
+
+    return one(), one(), draw(st.integers(2, 6))
+
+
+def dist_of(v, c, row):
+    """Canonical value->count map for one row."""
+    out = {}
+    for val, cnt in zip(np.asarray(v)[row], np.asarray(c)[row]):
+        if cnt > 0:
+            out[int(val)] = out.get(int(val), 0.0) + float(cnt)
+    return out
+
+
+class TestLemma4MergeProperties:
+    @given(cand_sets())
+    @settings(**SETTINGS)
+    def test_commutative(self, data):
+        (av, ac, ak), (bv, bc, bk), k = data
+        v1, c1, k1 = merge_candidates(av, ac, ak, bv, bc, bk, k)
+        v2, c2, k2 = merge_candidates(bv, bc, bk, av, ac, ak, k)
+        for r in range(av.shape[0]):
+            d1, d2 = dist_of(v1, c1, r), dist_of(v2, c2, r)
+            # top-k truncation can only differ when > k distinct values exist;
+            # with <= k distinct the merged multisets must be identical
+            if len(dist_of(jnp.concatenate([av, bv], 1), jnp.concatenate([ac, bc], 1), r)) <= k:
+                assert d1 == d2
+
+    @given(cand_sets())
+    @settings(**SETTINGS)
+    def test_mass_conserved(self, data):
+        (av, ac, ak), (bv, bc, bk), k = data
+        distinct = max(
+            len(dist_of(jnp.concatenate([av, bv], 1), jnp.concatenate([ac, bc], 1), r))
+            for r in range(av.shape[0])
+        )
+        v, c, _ = merge_candidates(av, ac, ak, bv, bc, bk, k)
+        if distinct <= k:
+            np.testing.assert_allclose(
+                np.asarray(c).sum(), np.asarray(ac).sum() + np.asarray(bc).sum(),
+                rtol=1e-6,
+            )
+
+    @given(cand_sets())
+    @settings(**SETTINGS)
+    def test_merge_with_empty_is_identity(self, data):
+        (av, ac, ak), _, k = data
+        zv = jnp.zeros_like(av)
+        zc = jnp.zeros_like(ac)
+        zk = jnp.zeros_like(ak)
+        v, c, kk = merge_candidates(av, ac, ak, zv, zc, zk, max(k, av.shape[1]))
+        for r in range(av.shape[0]):
+            assert dist_of(v, c, r) == dist_of(av, ac, r)
+
+
+class TestRelaxationProperties:
+    @given(small_relation())
+    @settings(**SETTINGS)
+    def test_monotone_and_bounded(self, data):
+        rel, answer = data
+        fd = FD("r", "a", "b")
+        res = relax_fd(rel, answer, fd)
+        extra = np.asarray(res.extra)
+        ans = np.asarray(answer & rel.valid)
+        assert not (extra & ans).any()  # extras disjoint from the answer
+        assert bool(res.converged)
+        assert int(res.iterations) <= default_max_iters(rel.capacity)
+
+    @given(small_relation())
+    @settings(**SETTINGS)
+    def test_idempotent_at_fixpoint(self, data):
+        rel, answer = data
+        fd = FD("r", "a", "b")
+        res1 = relax_fd(rel, answer, fd)
+        reached = (answer & rel.valid) | res1.extra
+        res2 = relax_fd(rel, reached, fd)
+        assert not np.asarray(res2.extra).any()
+
+    @given(small_relation())
+    @settings(**SETTINGS)
+    def test_closure_closed_under_key_sharing(self, data):
+        """No unvisited tuple shares an (a) or (b) value with the closure."""
+        rel, answer = data
+        fd = FD("r", "a", "b")
+        res = relax_fd(rel, answer, fd)
+        reached = np.asarray((answer & rel.valid) | res.extra)
+        outside = np.asarray(rel.valid) & ~reached
+        a = np.asarray(rel.columns["a"])
+        b = np.asarray(rel.columns["b"])
+        if reached.any() and outside.any():
+            assert not np.isin(a[outside], a[reached]).any()
+            assert not np.isin(b[outside], b[reached]).any()
+
+
+class TestSetopsProperties:
+    @given(small_relation())
+    @settings(**SETTINGS)
+    def test_member_in_matches_numpy(self, data):
+        rel, mask = data
+        a = rel.columns["a"]
+        b = rel.columns["b"]
+        got = np.asarray(member_in([a], rel.valid, [a], mask))
+        av = np.asarray(a)
+        expect = np.isin(av, av[np.asarray(mask & rel.valid)]) & np.asarray(rel.valid)
+        np.testing.assert_array_equal(got, expect)
+
+    @given(small_relation())
+    @settings(**SETTINGS)
+    def test_group_counts_sum_to_group_size(self, data):
+        rel, mask = data
+        mask = mask & rel.valid
+        a, b = rel.columns["a"], rel.columns["b"]
+        cand, count, violated, overflow = group_distinct_candidates([a], b, mask, k=8)
+        av, cv = np.asarray(a), np.asarray(count)
+        m = np.asarray(mask)
+        for i in range(rel.capacity):
+            if not m[i]:
+                continue
+            gsize = (av[m] == av[i]).sum()
+            assert cv[i].sum() == gsize
+
+    @given(small_relation())
+    @settings(**SETTINGS)
+    def test_violated_iff_two_distinct(self, data):
+        rel, mask = data
+        mask = mask & rel.valid
+        a, b = rel.columns["a"], rel.columns["b"]
+        _, _, violated, _ = group_distinct_candidates([a], b, mask, k=8)
+        av, bv, m = np.asarray(a), np.asarray(b), np.asarray(mask)
+        for i in range(rel.capacity):
+            exp = m[i] and len(set(bv[m & (av == av[i])])) >= 2
+            assert bool(np.asarray(violated)[i]) == exp
+
+
+class TestPossibleWorldFilters:
+    @given(small_relation(), st.integers(0, 5))
+    @settings(**SETTINGS)
+    def test_candidate_match_superset_after_repair(self, data, val):
+        """After repairing, every row that qualified on its primary value
+        still qualifies (the overlay always includes the original value's
+        group candidates)."""
+        from repro.core.detect import detect_fd
+        from repro.core.repair import fd_repair_candidates
+        from repro.core.update import apply_candidates
+
+        rel, _ = data
+        fd = FD("r", "a", "b")
+        det = detect_fd(rel, fd, rel.valid)
+        deltas = fd_repair_candidates(rel, fd, det, rel.valid)
+        rel2 = apply_candidates(rel, deltas)
+        before = np.asarray(rel.columns["b"] == val) & np.asarray(rel.valid)
+        after = np.asarray(rel2.candidate_matches("b", "==", val)) & np.asarray(rel2.valid)
+        assert (before <= after).all()

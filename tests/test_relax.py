@@ -1,0 +1,127 @@
+"""Query result relaxation — paper §4.1, Algorithm 1, Examples 2 & 3.
+
+The fixture rows (Table 2a):
+    0: 9001  LA    1: 9001 SF    2: 9001 LA    3: 10001 SF    4: 10001 NY
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.relax import default_max_iters, lemma2_prob, lemma3_upper_bound, relax_fd
+from tests.conftest import LA, NY, SF
+
+
+def mask_of(rel, rows):
+    m = np.zeros(rel.capacity, bool)
+    m[list(rows)] = True
+    return jnp.asarray(m)
+
+
+class TestExample2RhsFilter:
+    """Query: City == 'Los Angeles' (a filter on the FD's rhs)."""
+
+    def test_lemma1_one_round_lhs_expansion(self, cities_rel, fd_zip_city):
+        """Lemma 1: with the rhs expansion disabled (the planner's Lemma-1
+        path), one round adds exactly the lhs-sharing tuple {9001, SF}."""
+        answer = mask_of(cities_rel, [0, 2])
+        res = relax_fd(cities_rel, answer, fd_zip_city, use_rhs=False)
+        np.testing.assert_array_equal(
+            np.asarray(res.extra), [False, True, False, False, False]
+        )
+        assert bool(res.converged)
+        # one productive round + one round to observe the fixpoint
+        assert int(res.iterations) <= 2
+
+    def test_full_closure_reaches_rhs_cluster(self, cities_rel, fd_zip_city):
+        """Full transitive closure (the default; see planner.py for why):
+        row 1's SF links row 3, whose 10001 links row 4 — the whole
+        correlated cluster of Example 3 / Table 3."""
+        answer = mask_of(cities_rel, [0, 2])
+        res = relax_fd(cities_rel, answer, fd_zip_city, use_rhs=True)
+        np.testing.assert_array_equal(
+            np.asarray(res.extra), [False, True, False, True, True]
+        )
+        assert bool(res.converged)
+
+
+class TestExample3LhsFilter:
+    """Query: Zip == 9001 (a filter on the FD's lhs) — Table 3."""
+
+    def test_transitive_closure(self, cities_rel, fd_zip_city):
+        answer = mask_of(cities_rel, [0, 1, 2])
+        res = relax_fd(cities_rel, answer, fd_zip_city)
+        # iteration 1 adds {10001, SF} (shared rhs), iteration 2 adds
+        # {10001, NY} (shared lhs with the newly reached tuple)
+        np.testing.assert_array_equal(
+            np.asarray(res.extra), [False, False, False, True, True]
+        )
+        assert bool(res.converged)
+        assert int(res.iterations) >= 2
+
+    def test_closure_is_monotone(self, cities_rel, fd_zip_city):
+        """A larger answer can only produce a larger reached set."""
+        small = mask_of(cities_rel, [0])
+        large = mask_of(cities_rel, [0, 3])
+        r_small = relax_fd(cities_rel, small, fd_zip_city)
+        r_large = relax_fd(cities_rel, large, fd_zip_city)
+        reached_small = np.asarray(small | r_small.extra)
+        reached_large = np.asarray(large | r_large.extra)
+        assert (reached_small <= reached_large).all()
+
+
+class TestEdgeCases:
+    def test_empty_answer(self, cities_rel, fd_zip_city):
+        res = relax_fd(cities_rel, mask_of(cities_rel, []), fd_zip_city)
+        assert not np.asarray(res.extra).any()
+        assert bool(res.converged)
+
+    def test_full_answer_adds_nothing(self, cities_rel, fd_zip_city):
+        res = relax_fd(cities_rel, cities_rel.valid, fd_zip_city)
+        assert not np.asarray(res.extra).any()
+
+    def test_invalid_rows_never_reached(self, fd_zip_city):
+        from repro.core.relation import make_relation
+
+        rel = make_relation(
+            {"zip": np.array([1, 1, 1]), "city": np.array([LA, SF, LA])},
+            capacity=8,
+            overlay=["zip", "city"],
+        )
+        res = relax_fd(rel, mask_of(rel, [0]), fd_zip_city)
+        assert not np.asarray(res.extra)[3:].any()
+
+    def test_clean_data_no_extra_from_distinct_groups(self, fd_zip_city):
+        from repro.core.relation import make_relation
+
+        rel = make_relation(
+            {"zip": np.array([1, 2, 3, 4]), "city": np.array([0, 1, 2, 0])},
+            overlay=["zip", "city"],
+        )
+        # city 0 appears in rows 0 and 3 -> rhs link; zip links none.
+        res = relax_fd(rel, mask_of(rel, [0]), fd_zip_city)
+        np.testing.assert_array_equal(np.asarray(res.extra), [False, False, False, True])
+
+
+class TestLemmas:
+    def test_lemma2_bounds(self):
+        assert lemma2_prob(100, 0, 10) == 0.0
+        assert lemma2_prob(100, 5, 0) == 0.0
+        assert lemma2_prob(100, 5, 96) == 1.0  # pigeonhole: must contain one
+        p = lemma2_prob(1000, 10, 100)
+        # 1 - C(990,100)/C(1000,100): about 1 - (0.9)^10
+        assert 0.5 < p < 0.7
+
+    def test_lemma2_monotone_in_result_size(self):
+        ps = [lemma2_prob(1000, 10, a) for a in (10, 50, 100, 500)]
+        assert all(a <= b + 1e-12 for a, b in zip(ps, ps[1:]))
+
+    def test_lemma3_upper_bound(self):
+        d = [jnp.array([5.0, 3.0]), jnp.array([4.0])]
+        q = [jnp.array([2.0, 1.0]), jnp.array([1.0])]
+        # R = (8 - 3) + (4 - 1) = 8
+        assert float(lemma3_upper_bound(d, q)) == 8.0
+
+    def test_default_max_iters_logarithmic(self):
+        assert default_max_iters(1024) == 12
+        assert default_max_iters(2) == 3
