@@ -1,0 +1,13 @@
+"""Distribution layer: sharding hints and rules, compressed collectives,
+key-routed shuffle, and pipeline parallelism.
+
+Modules (kept import-light — model code imports ``hints`` at trace time):
+
+    hints       ``hint(x, *axis_names)`` activation sharding constraints
+    sharding    ``_PARAM_RULES`` / ``param_specs`` / ``batch_specs`` /
+                ``cache_specs`` / ``shardings`` — the dry-run lowering grid
+    collectives int8-compressed gradient all-reduce with error feedback
+    shuffle     ``shuffle_by_key`` — hash-route rows so each key lives on
+                exactly one shard (the substrate for sharded detect_dc)
+    pipeline    ``pipeline_apply`` — GPipe over a "stage" mesh axis
+"""

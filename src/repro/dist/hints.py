@@ -1,0 +1,93 @@
+"""Logical-axis sharding hints for activations.
+
+``hint(x, "dp", None, "tp")`` pins an intermediate to the mesh currently in
+scope: logical axis ``"dp"`` maps to the data-parallel mesh axes (``pod``
+composed with ``data``), ``"tp"`` maps to the tensor-parallel ``model``
+axis, ``None`` leaves a dim unconstrained.  Outside any mesh — or on a
+single device — it is an exact no-op (returns ``x`` itself), so model code
+can sprinkle hints unconditionally and CPU smoke tests see plain arrays.
+
+A dim whose size is not divisible by the mapped axes' extent is left
+unconstrained rather than erroring: the hint is advice to the partitioner,
+never a hard requirement.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# outer -> inner data-parallel axes; ``pod`` composes with ``data`` as the
+# outer DP axis on the multi-pod mesh (launch/mesh.py)
+DP_AXES = ("pod", "data")
+TP_AXIS = "model"
+
+
+def dp_axes(mesh):
+    """Data-parallel mesh axes present with extent > 1 (outer first)."""
+    return tuple(
+        a for a in DP_AXES if a in mesh.axis_names and mesh.shape[a] > 1
+    )
+
+
+_warned_no_mesh_api = False
+
+
+def current_mesh():
+    """The physical mesh installed by ``with mesh:``, or None."""
+    global _warned_no_mesh_api
+    try:
+        from jax._src.mesh import thread_resources
+
+        mesh = thread_resources.env.physical_mesh
+    except Exception:  # pragma: no cover — jax internals moved
+        if not _warned_no_mesh_api:
+            _warned_no_mesh_api = True
+            import warnings
+
+            warnings.warn(
+                "repro.dist.hints: jax no longer exposes "
+                "jax._src.mesh.thread_resources — sharding hints are now "
+                "no-ops everywhere. Update current_mesh() for this jax."
+            )
+        return None
+    if mesh is None or mesh.empty:
+        return None
+    return mesh
+
+
+def _resolve(mesh, name, dim):
+    """Map one logical axis name to a PartitionSpec entry for ``dim``."""
+    if name is None:
+        return None
+    if name == "dp":
+        axes = dp_axes(mesh)
+    elif name == "tp":
+        axes = (
+            (TP_AXIS,)
+            if TP_AXIS in mesh.axis_names and mesh.shape[TP_AXIS] > 1
+            else ()
+        )
+    else:  # a raw mesh axis name
+        axes = (name,) if name in mesh.axis_names and mesh.shape[name] > 1 else ()
+    if not axes:
+        return None
+    if dim % int(np.prod([mesh.shape[a] for a in axes])) != 0:
+        return None  # uneven split: let the partitioner decide
+    return axes if len(axes) > 1 else axes[0]
+
+
+def hint(x, *axis_names):
+    """Constrain ``x``'s sharding on the current mesh; no-op off-mesh."""
+    mesh = current_mesh()
+    if mesh is None or mesh.size <= 1:
+        return x
+    entries = [
+        _resolve(mesh, name, x.shape[i])
+        for i, name in enumerate(axis_names[: x.ndim])
+    ]
+    if all(e is None for e in entries):
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*entries)))

@@ -1,0 +1,224 @@
+"""Parameter / batch / cache PartitionSpec derivation.
+
+``_PARAM_RULES`` maps a parameter's leaf name (or ``parent/name`` when the
+bare name is ambiguous, e.g. attention vs MLP ``wo``) to a per-dim rule
+tuple over ``{None, "fsdp", "tp"}``:
+
+    "tp"    shard over the tensor-parallel ``model`` axis
+    "fsdp"  shard over the data-parallel axes (only when ``fsdp=True``)
+    None    replicate
+
+Rules are written for the *stacked* (max-rank) form of each parameter —
+leading unit dim U first.  Lower-rank variants of the same name (the
+unstacked final-norm ``scale``, non-swiglu ``wi`` without the gate dim)
+drop interior entries: alignment keeps the outer halves of the rule and
+removes from the middle, which is exactly where the optional broadcast
+dims sit.  Specs always come back full-length (len == ndim) because the
+optimizer-state derivation in launch/dryrun.py slices them positionally.
+
+Any rule axis that does not divide the dim evenly is dropped to None —
+specs are advice to GSPMD, never a crash.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist.hints import TP_AXIS, dp_axes  # noqa: F401 — re-exported
+
+# name (or parent/name) -> per-dim rule for the stacked parameter layout of
+# models/params.py.  Covered shapes noted inline; U = pattern-unit stack.
+_PARAM_RULES: Dict[str, Tuple[Optional[str], ...]] = {
+    # embedding / unembedding: (vocab, d) — vocab over TP (matches the
+    # tp-sharded logits hint in models/layers.py), d over FSDP
+    "embed": ("tp", "fsdp"),
+    "lm_head": ("tp", "fsdp"),
+    "pos_embed": (None, "fsdp"),  # (max_seq, d)
+    # norms: tiny, replicated.  (U, d) stacked / (d,) final
+    "scale": (None, None),
+    "bias": (None, None),
+    "q_norm": (None, None),  # (U, hd)
+    "k_norm": (None, None),
+    # attention: qkv (U, d, heads, hd) head-sharded over TP, d over FSDP;
+    # output proj (U, heads, hd, d) contracts the TP-sharded head dim
+    "wq": (None, "fsdp", "tp", None),
+    "wk": (None, "fsdp", "tp", None),
+    "wv": (None, "fsdp", "tp", None),
+    "attn/wo": (None, "tp", None, "fsdp"),
+    "cross/wo": (None, "tp", None, "fsdp"),
+    # dense mlp: wi (U, d, 2, ff) swiglu / (U, d, ff); wo (U, ff, d)
+    "mlp/wi": (None, "fsdp", None, "tp"),
+    "mlp/wo": (None, "tp", "fsdp"),
+    # MoE: experts over TP (expert parallelism shares the model axis — the
+    # moe_mlp hint shards expert_in (g, E, C, d) as ("dp", "tp", ...)),
+    # shared expert like a dense mlp.  we_i (U, E, d, 2, f) / (U, E, d, f)
+    "we_i": (None, "tp", "fsdp", None, None),
+    "we_o": (None, "tp", None, "fsdp"),  # (U, E, f, d)
+    "router": (None, None, None),  # (U, d, E) f32, tiny
+    "shared_wi": (None, "fsdp", None, "tp"),
+    "shared_wo": (None, "tp", "fsdp"),
+    # Mamba: channel (d_in) dim over TP, mirroring the mamba_mixer hints
+    "in_proj": (None, "fsdp", None, "tp"),  # (U, d, 2, d_in)
+    "conv_w": (None, "tp", None),  # (U, d_in, d_conv)
+    "conv_b": (None, "tp"),
+    "x_proj": (None, "tp", None),  # (U, d_in, r + 2n)
+    "dt_proj": (None, None, "tp"),  # (U, r, d_in)
+    "dt_bias": (None, "tp"),
+    "A_log": (None, "tp", None),  # (U, d_in, n) f32
+    "D": (None, "tp"),
+    "out_proj": (None, "tp", "fsdp"),  # (U, d_in, d)
+}
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    out = []
+    for k in path:
+        out.append(k.key if hasattr(k, "key") else str(k))
+    return tuple(out)
+
+
+def rule_for(path) -> Optional[Tuple[Optional[str], ...]]:
+    """Resolve the rule for a param path (tuple of str keys), most specific
+    key first: ``parent/name`` then bare ``name``.  None if unmatched."""
+    names = _path_names(path)
+    if len(names) >= 2:
+        qualified = f"{names[-2]}/{names[-1]}"
+        if qualified in _PARAM_RULES:
+            return _PARAM_RULES[qualified]
+    return _PARAM_RULES.get(names[-1])
+
+
+def _align(rule: Tuple, rank: int) -> Tuple:
+    """Fit a rule to a param rank.  Shorter params drop the rule's interior
+    entries (optional broadcast dims); extra leading dims replicate."""
+    rule = tuple(rule)
+    if len(rule) == rank:
+        return rule
+    if len(rule) < rank:
+        return (None,) * (rank - len(rule)) + rule
+    head, tail = (rank + 1) // 2, rank // 2
+    return rule[:head] + (rule[len(rule) - tail:] if tail else ())
+
+
+def _axis_entry(axes: Tuple[str, ...], mesh, dim: int):
+    """PartitionSpec entry for sharding ``dim`` over ``axes`` (with even-
+    divisibility fallback: full axis set, then the innermost axis alone)."""
+    for cand in (axes, axes[-1:]):
+        if not cand:
+            continue
+        if dim % int(np.prod([mesh.shape[a] for a in cand])) == 0:
+            return cand if len(cand) > 1 else cand[0]
+    return None
+
+
+def _spec_for(x, rule, mesh, fsdp: bool) -> P:
+    entries = []
+    for i, r in enumerate(_align(rule, x.ndim)):
+        if r == "tp" and TP_AXIS in mesh.axis_names and mesh.shape[TP_AXIS] > 1:
+            entries.append(_axis_entry((TP_AXIS,), mesh, x.shape[i]))
+        elif r == "fsdp" and fsdp and dp_axes(mesh):
+            entries.append(_axis_entry(dp_axes(mesh), mesh, x.shape[i]))
+        else:
+            entries.append(None)
+    return P(*entries)
+
+
+def param_specs(aparams, mesh, fsdp: bool = True):
+    """PartitionSpec tree for a parameter tree (``_PARAM_RULES``-driven).
+
+    Unmatched leaves raise — every param name must carry an explicit rule
+    (tests assert coverage across all 10 architecture configs).
+    """
+
+    def leaf(path, x):
+        rule = rule_for(path)
+        if rule is None:
+            raise KeyError(
+                f"no _PARAM_RULES entry for param "
+                f"{'/'.join(_path_names(path))} (shape {tuple(x.shape)})"
+            )
+        return _spec_for(x, rule, mesh, fsdp)
+
+    return jax.tree_util.tree_map_with_path(leaf, aparams)
+
+
+def param_specs_dp_only(aparams, mesh):
+    """Pure-FSDP specs: no tensor-parallel dim; each weight fully sharded
+    over ALL mesh axes on its largest evenly-divisible dim (the TP
+    right-sizing experiment in launch/dryrun.py)."""
+    all_axes = tuple(mesh.axis_names)
+    total = int(np.prod([mesh.shape[a] for a in all_axes]))
+
+    def leaf(x):
+        entries = [None] * x.ndim
+        dims = sorted(range(x.ndim), key=lambda i: -x.shape[i])
+        for i in dims:
+            if x.shape[i] % total == 0:
+                entries[i] = all_axes if len(all_axes) > 1 else all_axes[0]
+                break
+        return P(*entries)
+
+    return jax.tree.map(leaf, aparams)
+
+
+def batch_specs(specs, mesh, all_axes: bool = False):
+    """Batch inputs: dim 0 sharded over the DP axes (or every axis when
+    ``all_axes`` — the dp-only experiment spreads batch over TP too)."""
+    axes = tuple(mesh.axis_names) if all_axes else dp_axes(mesh)
+
+    def leaf(x):
+        if x.ndim == 0:
+            return P()
+        entries = [None] * x.ndim
+        entries[0] = _axis_entry(axes, mesh, x.shape[0]) if axes else None
+        return P(*entries)
+
+    return jax.tree.map(leaf, specs)
+
+
+# cache leaves: which dim (beyond batch) is TP-shardable, by name
+_CACHE_TP_DIM = {
+    "k": 3, "v": 3,            # (U, b, s, kv_heads, hd)
+    "cross_k": 3, "cross_v": 3,
+    "k_scale": 3, "v_scale": 3,  # (U, b, s, kv_heads)
+    "h": 2,                    # (U, b, d_in, d_state)
+    "conv": 3,                 # (U, b, d_conv-1, d_in)
+}
+
+
+def cache_specs(acache, mesh):
+    """KV / SSM cache: batch (dim 1) over DP; heads / channels over TP when
+    they divide evenly (true-kv-head counts often don't — then replicate)."""
+    dp = dp_axes(mesh)
+
+    def leaf(path, x):
+        if x.ndim < 2:
+            return P()  # step counter "t"
+        entries = [None] * x.ndim
+        entries[1] = _axis_entry(dp, mesh, x.shape[1]) if dp else None
+        name = _path_names(path)[-1]
+        tp_dim = _CACHE_TP_DIM.get(name)
+        if (
+            tp_dim is not None
+            and tp_dim < x.ndim
+            and TP_AXIS in mesh.axis_names
+            and mesh.shape[TP_AXIS] > 1
+        ):
+            entries[tp_dim] = _axis_entry((TP_AXIS,), mesh, x.shape[tp_dim])
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(leaf, acache)
+
+
+def shardings(specs, mesh):
+    """PartitionSpec tree -> NamedSharding tree on ``mesh``."""
+    return jax.tree.map(
+        lambda sp: NamedSharding(mesh, sp),
+        specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,99 @@
+"""Minimal stand-in for ``hypothesis`` when it is not installed.
+
+The container this repo develops in has no hypothesis wheel and cannot
+install one; CI installs the real package, so this shim only activates as
+a fallback (see conftest.py).  It implements exactly the surface the test
+suite uses — ``given`` / ``settings`` / ``strategies.{integers, lists,
+booleans, composite}`` — by running each property ``max_examples`` times
+against seeded-random draws.  No shrinking, no database: failures report
+the drawn values via the assertion itself.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+
+
+class _Strategy:
+    def __init__(self, draw_fn):
+        self._draw_fn = draw_fn
+
+    def draw(self, rng):
+        return self._draw_fn(rng)
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def booleans():
+    return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+def lists(elements, min_size=0, max_size=10):
+    def draw(rng):
+        n = rng.randint(min_size, max_size)
+        return [elements.draw(rng) for _ in range(n)]
+
+    return _Strategy(draw)
+
+
+def composite(fn):
+    @functools.wraps(fn)
+    def builder(*args, **kwargs):
+        def draw(rng):
+            return fn(lambda s: s.draw(rng), *args, **kwargs)
+
+        return _Strategy(draw)
+
+    return builder
+
+
+def settings(**kwargs):
+    def deco(fn):
+        fn._fallback_settings = kwargs
+        return fn
+
+    return deco
+
+
+def given(*strategies_):
+    def deco(fn):
+        max_examples = getattr(fn, "_fallback_settings", {}).get(
+            "max_examples", 20
+        )
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            for example in range(max_examples):
+                rng = random.Random(f"{fn.__qualname__}:{example}")
+                drawn = [s.draw(rng) for s in strategies_]
+                fn(*args, *drawn, **kwargs)
+
+        # hide the drawn parameters from pytest's fixture resolution: the
+        # last len(strategies_) positional params are strategy-filled
+        params = list(inspect.signature(fn).parameters.values())
+        wrapper.__signature__ = inspect.Signature(
+            params[: len(params) - len(strategies_)]
+        )
+        del wrapper.__wrapped__  # pytest would unwrap to the raw signature
+        return wrapper
+
+    return deco
+
+
+def build_module():
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    st = types.ModuleType("hypothesis.strategies")
+    st.integers = integers
+    st.booleans = booleans
+    st.lists = lists
+    st.composite = composite
+    mod.strategies = st
+    mod.__is_fallback__ = True
+    return mod, st

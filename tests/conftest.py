@@ -1,9 +1,30 @@
-"""Shared fixtures: the paper's running examples as Relations."""
+"""Shared fixtures: the paper's running examples as Relations.
+
+Also installs the hypothesis fallback shim when the real package is
+missing (the dev container has no wheel; CI installs the real one).
+"""
 
 from __future__ import annotations
 
+import importlib.util
+import os
+import sys
+
 import numpy as np
 import pytest
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:  # pragma: no cover — only in wheel-less environments
+    _spec = importlib.util.spec_from_file_location(
+        "_hypothesis_fallback",
+        os.path.join(os.path.dirname(__file__), "_hypothesis_fallback.py"),
+    )
+    _fallback = importlib.util.module_from_spec(_spec)
+    _spec.loader.exec_module(_fallback)
+    sys.modules["hypothesis"], sys.modules["hypothesis.strategies"] = (
+        _fallback.build_module()
+    )
 
 from repro.core.constraints import FD, DC, Atom
 from repro.core.relation import Dictionary, make_relation

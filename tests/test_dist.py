@@ -5,6 +5,7 @@ tests spawn a subprocess with 8 forced host devices where needed; pure
 logic (specs, plans, compression math) runs in-process.
 """
 
+import os
 import subprocess
 import sys
 import textwrap
@@ -154,13 +155,16 @@ _SUBPROCESS_TEST = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
 def test_mesh_collectives_subprocess():
     """shuffle / compressed all-reduce / pipeline on an 8-device mesh."""
+    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     res = subprocess.run(
         [sys.executable, "-c", _SUBPROCESS_TEST],
-        capture_output=True, text=True, timeout=600,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
-        cwd="/root/repo",
+        capture_output=True, text=True, timeout=1200,
+        env={"PYTHONPATH": os.path.join(repo_root, "src"),
+             "PATH": os.environ.get("PATH", "/usr/bin:/bin")},
+        cwd=repo_root,
     )
     assert "SUBPROCESS_OK" in res.stdout, res.stdout + "\n" + res.stderr
 

@@ -1,0 +1,132 @@
+"""In-process unit tests for the distribution layer (no mesh subprocess):
+
+* ``hint`` is an exact no-op on a single device — models can call it
+  unconditionally and CPU smoke tests see the same array object.
+* ``_PARAM_RULES`` covers every ``abstract_params`` leaf of all 10
+  architecture configs, and ``param_specs`` yields full-length specs
+  (launch/dryrun.py slices them positionally for optimizer moments).
+* spec helpers degrade to fully-replicated on a trivial 1x1 mesh.
+* host-side shuffle reference: routing, capacity, and overflow semantics.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.dist.hints import hint
+from repro.dist.sharding import (
+    _PARAM_RULES,
+    batch_specs,
+    cache_specs,
+    param_specs,
+    param_specs_dp_only,
+    rule_for,
+)
+from repro.dist.shuffle import shuffle_by_key_host
+from repro.models.params import abstract_params
+
+
+def _trivial_mesh():
+    dev = np.asarray(jax.devices()[:1]).reshape(1, 1)
+    return Mesh(dev, ("data", "model"))
+
+
+class TestHintNoop:
+    def test_identity_off_mesh(self):
+        x = jnp.arange(12.0).reshape(3, 4)
+        assert hint(x, "dp", "tp") is x
+
+    def test_identity_under_jit(self):
+        @jax.jit
+        def f(x):
+            return hint(x, "dp", None, "tp") * 2.0
+
+        x = jnp.ones((2, 3, 4))
+        np.testing.assert_allclose(np.asarray(f(x)), 2.0)
+
+    def test_identity_on_trivial_mesh(self):
+        x = jnp.ones((4, 4))
+        with _trivial_mesh():
+            assert hint(x, "dp", "tp") is x
+
+
+class TestParamRulesCoverage:
+    @pytest.mark.parametrize("arch", ARCH_IDS)
+    def test_every_param_has_rule(self, arch):
+        cfg = get_config(arch)
+        aparams = abstract_params(cfg)
+        leaves = jax.tree_util.tree_flatten_with_path(aparams)[0]
+        assert leaves
+        for path, leaf in leaves:
+            rule = rule_for(path)
+            assert rule is not None, (arch, path)
+            for entry in rule:
+                assert entry in (None, "fsdp", "tp"), (arch, path, entry)
+
+    @pytest.mark.parametrize("arch", ARCH_IDS)
+    def test_specs_full_length_and_replicated_on_one_device(self, arch):
+        cfg = get_config(arch)
+        aparams = abstract_params(cfg)
+        mesh = _trivial_mesh()
+        specs = param_specs(aparams, mesh, fsdp=True)
+        flat_p = jax.tree_util.tree_leaves(aparams)
+        flat_s = jax.tree_util.tree_leaves(
+            specs, is_leaf=lambda x: isinstance(x, P)
+        )
+        assert len(flat_p) == len(flat_s)
+        for leaf, spec in zip(flat_p, flat_s):
+            # full-length so dryrun's adafactor vr/vc derivation can slice
+            assert len(spec) == leaf.ndim, (arch, leaf.shape, spec)
+            # 1x1 mesh: every axis has extent 1 -> nothing to shard
+            assert all(e is None for e in spec), (arch, leaf.shape, spec)
+
+
+class TestSpecHelpersTrivialMesh:
+    def test_batch_specs_replicated(self):
+        mesh = _trivial_mesh()
+        specs = {"tokens": jax.ShapeDtypeStruct((8, 16), jnp.int32)}
+        out = batch_specs(specs, mesh)
+        assert out["tokens"] == P(None, None)
+
+    def test_cache_specs_scalar_counter(self):
+        mesh = _trivial_mesh()
+        cache = {"t": jax.ShapeDtypeStruct((), jnp.int32),
+                 "block_0": {"k": jax.ShapeDtypeStruct((2, 4, 8, 2, 16),
+                                                       jnp.bfloat16)}}
+        out = cache_specs(cache, mesh)
+        assert out["t"] == P()
+        assert len(out["block_0"]["k"]) == 5
+
+    def test_dp_only_no_divisible_dim_replicates(self):
+        mesh = _trivial_mesh()
+        out = param_specs_dp_only({"w": jax.ShapeDtypeStruct((3, 5), jnp.float32)},
+                                  mesh)
+        assert len(out["w"]) == 2
+
+
+class TestShuffleHostReference:
+    def test_each_key_on_one_shard(self):
+        rng = np.random.default_rng(1)
+        keys = rng.integers(0, 17, (4, 24)).astype(np.int32)
+        payload = keys[..., None]
+        valid = rng.random((4, 24)) < 0.8
+        ok, op, ov, ovf = shuffle_by_key_host(keys, payload, valid, 4)
+        assert not ovf
+        for key in np.unique(keys[valid]):
+            shards = [s for s in range(4) if (ok[s][ov[s]] == key).any()]
+            assert shards == [int(key) % 4]
+        assert ov.sum() == valid.sum()
+
+    def test_overflow_flagged_and_rows_dropped(self):
+        # every row carries the same key -> one shard gets all 32 rows but
+        # capacity_factor 0.5 allows only 4
+        keys = np.full((4, 8), 3, np.int32)
+        payload = keys[..., None]
+        valid = np.ones((4, 8), bool)
+        ok, op, ov, ovf = shuffle_by_key_host(keys, payload, valid, 4,
+                                              capacity_factor=0.5)
+        assert ovf
+        assert ov.sum() == 4 and ov[3].sum() == 4
