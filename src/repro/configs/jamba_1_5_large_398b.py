@@ -4,7 +4,7 @@
 
 Pattern unit (8 blocks = 1 attention + 7 mamba, Jamba's 1:7 ratio); MoE
 replaces the MLP every other block (Jamba: e=2).  Optimizer state runs in
-bf16 (DESIGN.md: fp32 AdamW for 398B does not fit a single 256-chip pod).
+bf16 (DESIGN.md §5: fp32 AdamW for 398B does not fit a single 256-chip pod).
 """
 
 from repro.models.config import BlockSpec, ModelConfig, MoEConfig, SSMConfig
@@ -28,7 +28,7 @@ CONFIG = ModelConfig(
     moe=MoEConfig(n_experts=16, top_k=2, d_ff_expert=24576, every=2),
     ssm=SSMConfig(d_state=16, d_conv=4, expand=2),
     tie_embeddings=True,
-    # 398B on one 256-chip pod: bf16 master + Adafactor (DESIGN.md §2)
+    # 398B on one 256-chip pod: bf16 master + Adafactor (DESIGN.md §5)
     param_dtype="bfloat16",
     optimizer="adafactor",
 )

@@ -4,7 +4,7 @@
 
 Optimizer state in bf16: fp32 AdamW for 340B params cannot fit a single
 256-chip v5e pod (340e9 x 12 B / 256 = 16 GB/chip before activations);
-bf16 m/v + fp32 master = 10.6 GB/chip (see DESIGN.md hardware notes).
+bf16 m/v + fp32 master = 10.6 GB/chip (see DESIGN.md §5 hardware notes).
 """
 
 from repro.models.config import BlockSpec, ModelConfig
@@ -22,7 +22,7 @@ CONFIG = ModelConfig(
     rope="standard",
     pattern=(BlockSpec(),),
     tie_embeddings=False,
-    # 340B on one 256-chip pod: bf16 master + Adafactor (DESIGN.md §2)
+    # 340B on one 256-chip pod: bf16 master + Adafactor (DESIGN.md §5)
     param_dtype="bfloat16",
     optimizer="adafactor",
 )

@@ -9,7 +9,7 @@ Four shapes per LM architecture (assignment sheet):
     long_500k    seq=524,288 global_batch=1     serve_step; SUB-QUADRATIC
                                                  archs only (ssm / hybrid /
                                                  mostly-local) — skips are
-                                                 recorded in DESIGN.md
+                                                 recorded in DESIGN.md §5
 
 ``input_specs`` returns ShapeDtypeStructs only — nothing is allocated; the
 dry-run lowers against them (the shannon/kernels pattern).

@@ -102,6 +102,27 @@ def rule_attrs(rule) -> Tuple[str, ...]:
     return rule.attrs
 
 
+def equality_key_attrs(rule) -> Tuple[str, ...]:
+    """Attributes usable as a shard-routing key for distributed detection
+    (DESIGN.md §8): every violating pair agrees on them, so hash-routing
+    rows by their combined value puts all of a row's potential partners on
+    the same shard.
+
+    FDs always key on the lhs.  A general DC contributes an attribute per
+    equality atom over the *same* attribute on both sides (``t1.a == t2.a``
+    — the paper's "conditions over the same attribute", §4.2); an equality
+    atom across two different attributes gives each role a different
+    routing key and is not shardable this way.  Empty result means the
+    rule has no equality key and sharded detection must fall back to the
+    dense scan.
+    """
+    if isinstance(rule, FD):
+        return rule.lhs
+    return tuple(
+        a.left for a in rule.atoms if a.op == "==" and a.left == a.right
+    )
+
+
 def overlaps_query(rule, query_attrs: Sequence[str]) -> bool:
     """Paper §4.1: a rule affects a query iff (X u Y) n (P u W) != {} ."""
     return bool(set(rule_attrs(rule)) & set(query_attrs))

@@ -17,6 +17,10 @@ are row-indexed and accumulate TPU-grid-friendly.
 Scopes: ``row_scope`` is the paper's "query result (+ extra)" side and
 ``col_scope`` the "rest of the dataset" side — incremental cleaning shrinks
 these masks instead of re-partitioning a matrix.
+
+``detect_dc_auto`` / ``detect_fd_auto`` are the dispatch seam to the
+distributed path (DESIGN.md §8): on a mesh, rules with an equality key are
+routed through ``dist.shuffle.shuffle_by_key`` and scanned per shard.
 """
 
 from __future__ import annotations
@@ -123,3 +127,62 @@ def detect_dc(
 def dc_violation_count(result: DCDetectResult) -> jnp.ndarray:
     """Total number of violating ordered pairs (each counted once)."""
     return jnp.sum(result.t1_count)
+
+
+# ------------------------------------------------------------------ dispatch
+# The seam between the dense single-device scans above and the sharded path
+# in repro.dist.detect (DESIGN.md §8).  Imports of the dist layer are lazy:
+# core stays importable without touching mesh machinery, and the sharded
+# module itself imports this one.
+
+
+def will_shard(rule, mesh, n_shards: int | None = None) -> bool:
+    """True when the auto dispatchers below will take the sharded path for
+    ``rule`` on ``mesh`` — the single source of truth for that decision."""
+    from repro.core.constraints import equality_key_attrs
+
+    if mesh is None or not equality_key_attrs(rule):
+        return False
+    if n_shards is not None:
+        return n_shards >= 2
+    from repro.dist.detect import default_n_shards
+
+    return default_n_shards(mesh) >= 2
+
+
+def detect_dc_auto(
+    rel: Relation,
+    dc: DC,
+    row_scope: jnp.ndarray,
+    col_scope: jnp.ndarray,
+    block: int = 256,
+    mesh=None,
+    n_shards: int | None = None,
+) -> DCDetectResult:
+    """``detect_dc`` with sharded dispatch: when a mesh is active and the DC
+    carries a same-attribute equality atom, route rows by the equality key
+    and scan per shard (bit-identical results); otherwise the dense scan.
+    """
+    if will_shard(dc, mesh, n_shards):
+        from repro.dist.detect import detect_dc_sharded
+
+        return detect_dc_sharded(
+            rel, dc, row_scope, col_scope, mesh, n_shards=n_shards, block=block
+        )
+    return detect_dc(rel, dc, row_scope, col_scope, block=block)
+
+
+def detect_fd_auto(
+    rel: Relation,
+    fd: FD,
+    scope: jnp.ndarray,
+    k: int | None = None,
+    mesh=None,
+    n_shards: int | None = None,
+) -> FDDetectResult:
+    """``detect_fd`` with sharded dispatch (FDs always key on the lhs)."""
+    if will_shard(fd, mesh, n_shards):
+        from repro.dist.detect import detect_fd_sharded
+
+        return detect_fd_sharded(rel, fd, scope, mesh, k=k, n_shards=n_shards)
+    return detect_fd(rel, fd, scope, k=k)

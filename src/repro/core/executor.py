@@ -31,7 +31,7 @@ import numpy as np
 from repro.core import stats as statsmod
 from repro.core.constraints import DC, FD
 from repro.core.cost import CostModel
-from repro.core.detect import detect_dc, detect_fd
+from repro.core.detect import detect_dc_auto, detect_fd, detect_fd_auto, will_shard
 from repro.core.operators import (
     GroupBySpec,
     JoinState,
@@ -64,6 +64,12 @@ class DaisyConfig:
     collect_stats: bool = True
     max_relax_iters: Optional[int] = None
     lemma1_fast_path: bool = False
+    # sharded detection (DESIGN.md §8): with a mesh set, equality-keyed
+    # rules detect over shuffle_by_key (detect_shards logical shards;
+    # None -> the mesh's data-parallel extent).  Results are bit-identical
+    # to the dense scans, so this is purely an execution-strategy knob.
+    mesh: Optional[object] = None
+    detect_shards: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -71,6 +77,7 @@ class StepReport:
     rule: str
     table: str
     mode: str  # incremental | full | skipped
+    detect_path: str = "dense"  # dense | sharded
     answer_size: int = 0
     extra: int = 0
     repaired: int = 0
@@ -153,6 +160,12 @@ class Daisy:
             return {}
         return {key: cm.should_switch_to_full() for key, cm in self.cost.items()}
 
+    # ---------------------------------------------------------- detect path
+    def _detect_mesh(self, step: CleanStep):
+        """The mesh to detect on for this step: the configured mesh when the
+        planner marked the rule shardable, else None (dense scan)."""
+        return self.config.mesh if step.shardable else None
+
     # ------------------------------------------------------------- FD steps
     def _clean_fd(
         self, step: CleanStep, report: ExecReport
@@ -204,7 +217,13 @@ class Daisy:
             if cm:
                 cm.record(rep.answer_size, rep.extra, 0.0, 0)
             return
-        det = detect_fd(rel, fd, scope, k=self.config.k)
+        mesh = self._detect_mesh(step)
+        det = detect_fd_auto(
+            rel, fd, scope, k=self.config.k,
+            mesh=mesh, n_shards=self.config.detect_shards,
+        )
+        if will_shard(fd, mesh, self.config.detect_shards):
+            rep.detect_path = "sharded"
         deltas = fd_repair_candidates(rel, fd, det, repair_scope)
         rep.repaired = int(np.asarray(jnp.sum(det.violated & repair_scope)))
         rel = apply_candidates(rel, deltas)
@@ -252,7 +271,13 @@ class Daisy:
             row_scope = answer & unchecked(rel, dc.name)
             col_scope = rel.valid
 
-        det = detect_dc(rel, dc, row_scope, col_scope, block=self.config.dc_block)
+        mesh = self._detect_mesh(step)
+        if will_shard(dc, mesh, self.config.detect_shards):
+            rep.detect_path = "sharded"
+        det = detect_dc_auto(
+            rel, dc, row_scope, col_scope, block=self.config.dc_block,
+            mesh=mesh, n_shards=self.config.detect_shards,
+        )
         deltas = dc_repair_candidates(rel, dc, det, row_scope, k=self.config.k)
         repaired = (det.t1_count > 0) | (det.t2_count > 0)
         rep.repaired = int(np.asarray(jnp.sum(repaired & row_scope)))
@@ -262,7 +287,10 @@ class Daisy:
             # partners of the answer (the DC-correlated tuples, §4.2) get their
             # role fixes too — the incremental matrix strip [rest x answer].
             partner_scope = rel.valid & ~answer
-            det2 = detect_dc(rel, dc, partner_scope, answer, block=self.config.dc_block)
+            det2 = detect_dc_auto(
+                rel, dc, partner_scope, answer, block=self.config.dc_block,
+                mesh=mesh, n_shards=self.config.detect_shards,
+            )
             deltas2 = dc_repair_candidates(rel, dc, det2, partner_scope, k=self.config.k)
             rel = apply_candidates(rel, deltas2)
             rep.extra = int(

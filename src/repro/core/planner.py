@@ -25,7 +25,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Sequence, Tuple
 
-from repro.core.constraints import DC, FD, overlaps_query
+from repro.core.constraints import DC, FD, equality_key_attrs, overlaps_query
 from repro.core.operators import JoinClause, Pred, Query
 
 
@@ -37,6 +37,10 @@ class CleanStep:
     mode: str  # 'incremental' | 'full' | 'auto' (DC: Algorithm 2 at exec time)
     use_rhs: bool = True  # Algorithm 1 rhs expansion (False = Lemma-1 path)
     preds: Tuple[Pred, ...] = ()  # the filter this step cleans against
+    # the rule has an equality routing key, so detection MAY take the
+    # sharded path when the executor runs on a mesh (DESIGN.md §8); the
+    # executor combines this with its mesh config at execution time.
+    shardable: bool = False
 
 
 @dataclasses.dataclass
@@ -79,23 +83,37 @@ def plan_query(
             if not overlaps_query(rule, attrs):
                 continue
             full = want_full.get((table, rule.name), False)
+            shardable = bool(equality_key_attrs(rule))
             if isinstance(rule, FD):
                 if not preds and query.groupby is not None:
-                    steps.append(CleanStep(table, rule, "pre", "full", True, ()))
+                    steps.append(
+                        CleanStep(table, rule, "pre", "full", True, (), shardable)
+                    )
                     notes.append(f"{rule.name}@{table}: pushdown full (bare group-by)")
                 elif full:
-                    steps.append(CleanStep(table, rule, "pre", "full", True, preds))
+                    steps.append(
+                        CleanStep(table, rule, "pre", "full", True, preds, shardable)
+                    )
                     notes.append(f"{rule.name}@{table}: cost-model switch -> full")
                 else:
                     use_rhs = _fd_use_rhs(rule, preds, lemma1_fast_path)
                     steps.append(
-                        CleanStep(table, rule, "post", "incremental", use_rhs, preds)
+                        CleanStep(
+                            table, rule, "post", "incremental", use_rhs, preds,
+                            shardable,
+                        )
                     )
                     if not use_rhs:
                         notes.append(f"{rule.name}@{table}: Lemma-1 rhs-filter path")
             else:
                 mode = "full" if full else "auto"
-                steps.append(CleanStep(table, rule, "post", mode, True, preds))
+                steps.append(
+                    CleanStep(table, rule, "post", mode, True, preds, shardable)
+                )
+                if not shardable:
+                    notes.append(
+                        f"{rule.name}@{table}: no equality atom — dense detect only"
+                    )
 
     base_attrs = list(query.attrs)
     add_steps(query.table, tuple(query.preds), base_attrs)

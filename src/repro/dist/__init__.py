@@ -1,13 +1,21 @@
 """Distribution layer: sharding hints and rules, compressed collectives,
-key-routed shuffle, and pipeline parallelism.
+key-routed shuffle, sharded detection, and pipeline parallelism
+(DESIGN.md §6).
 
 Modules (kept import-light — model code imports ``hints`` at trace time):
 
     hints       ``hint(x, *axis_names)`` activation sharding constraints
     sharding    ``_PARAM_RULES`` / ``param_specs`` / ``batch_specs`` /
                 ``cache_specs`` / ``shardings`` — the dry-run lowering grid
-    collectives int8-compressed gradient all-reduce with error feedback
+    collectives int8-compressed gradient all-reduce with error feedback;
+                see that module's docstring for the wire contract (per-
+                tensor symmetric scale, f32 residual carried by the caller,
+                mean-reduce over the data-parallel axes)
     shuffle     ``shuffle_by_key`` — hash-route rows so each key lives on
-                exactly one shard (the substrate for sharded detect_dc)
+                exactly one shard; returns the inverse permutation
+                (``src``) and an overflow flag for skewed keys
+    detect      ``detect_dc_sharded`` / ``detect_fd_sharded`` — violation
+                detection over the routed layout, bit-identical to the
+                dense scans in core/detect.py (DESIGN.md §8)
     pipeline    ``pipeline_apply`` — GPipe over a "stage" mesh axis
 """

@@ -1,10 +1,32 @@
-"""Compressed cross-replica collectives.
+"""Compressed cross-replica collectives (DESIGN.md §6).
 
 Gradient all-reduce with int8 quantization and error feedback: each data-
 parallel rank quantizes (gradient + carried residual) to int8 with a single
 per-tensor scale, all-reduces the dequantized value, and carries the
 quantization error into the next step (1-bit-Adam / DGC style error
 feedback, which keeps SGD convergence despite the lossy wire format).
+
+The contract callers rely on (wired into train/steps.py behind the
+``grad_compress`` flag):
+
+* **quantization** is symmetric per-tensor int8: ``q = round(x / scale)``
+  clipped to [-127, 127] with ``scale = amax / 127`` (``scale = 1`` for an
+  all-zero tensor, so zeros round-trip exactly);
+* **error feedback**: the value quantized is ``gradient + residual``; the
+  new residual is ``(gradient + residual) - dequantize(q)``, a per-leaf
+  f32 pytree the CALLER carries between steps (``opt_state["gerr"]`` in
+  the training step — ``init_opt_state(grad_compress=True)`` allocates
+  it).  Residuals are rank-local state and are never reduced;
+* **reduction** is a mean over the data-parallel mesh axes of the
+  dequantized value, so the result has gradient dtype and magnitude —
+  drop-in for the uncompressed mean-reduce;
+* **shapes/dtypes**: any pytree of real-valued leaves; residual leaves are
+  f32 with the leaf's shape regardless of gradient dtype.
+
+This is the reference form: inputs enter replicated, which pins the
+numerics but means no int8 crosses the wire standalone — realizing the
+bytes-on-wire saving needs ``per_rank`` fused inside a manual-DP
+``shard_map`` of the step itself (see ``grad_allreduce_compressed``).
 """
 
 from __future__ import annotations

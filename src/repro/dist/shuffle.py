@@ -13,11 +13,18 @@ leading (shard) dim placed on the mesh's data axis via ``out_shardings`` —
 under GSPMD the cross-shard moves lower to all-to-all style collectives.
 ``shuffle_by_key_host`` is the pure-numpy reference with identical routing
 and capacity semantics.
+
+Every output slot carries its source row's flat index (``src``) — the
+inverse permutation.  Consumers that compute per-row results in the routed
+layout (dist/detect.py) scatter them back to the original row order with
+``out[src[slot]] = result[slot]``; empty slots hold the out-of-bounds
+sentinel ``n_shards * n`` and drop out of the scatter.
 """
 
 from __future__ import annotations
 
-from typing import Tuple
+import functools
+from typing import NamedTuple
 
 import numpy as np
 
@@ -28,6 +35,18 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.dist.sharding import dp_axes
 
 CAPACITY_FACTOR = 2.0
+
+
+class ShuffleResult(NamedTuple):
+    """Routed layout: ``(n_shards, cap)`` leading dims, plus the inverse
+    permutation ``src`` (flat source row index per slot; ``n_shards * n``
+    for empty slots) and the scalar ``overflow`` flag."""
+
+    keys: jnp.ndarray  # (n_shards, cap)
+    payload: jnp.ndarray  # (n_shards, cap, ...)
+    valid: jnp.ndarray  # (n_shards, cap) bool
+    src: jnp.ndarray  # (n_shards, cap) int32 flat source index
+    overflow: jnp.ndarray  # () bool
 
 
 def _capacity(n_cols: int, capacity_factor: float) -> int:
@@ -45,14 +64,17 @@ def shuffle_by_key_host(
     keys = np.asarray(keys)
     payload = np.asarray(payload)
     valid = np.asarray(valid)
-    cap = _capacity(keys.shape[1], capacity_factor)
+    n = keys.shape[1]
+    total = keys.shape[0] * n
+    cap = _capacity(n, capacity_factor)
     out_k = np.zeros((n_shards, cap), keys.dtype)
     out_p = np.zeros((n_shards, cap) + payload.shape[2:], payload.dtype)
     out_v = np.zeros((n_shards, cap), bool)
+    out_src = np.full((n_shards, cap), total, np.int32)
     counts = np.zeros(n_shards, np.int64)
     overflow = False
     for s in range(keys.shape[0]):
-        for i in range(keys.shape[1]):
+        for i in range(n):
             if not valid[s, i]:
                 continue
             d = int(keys[s, i]) % n_shards
@@ -62,26 +84,16 @@ def shuffle_by_key_host(
             out_k[d, counts[d]] = keys[s, i]
             out_p[d, counts[d]] = payload[s, i]
             out_v[d, counts[d]] = True
+            out_src[d, counts[d]] = s * n + i
             counts[d] += 1
-    return out_k, out_p, out_v, overflow
+    return ShuffleResult(out_k, out_p, out_v, out_src, overflow)
 
 
-def shuffle_by_key(
-    keys: jnp.ndarray,  # (n_shards, n) int
-    payload: jnp.ndarray,  # (n_shards, n, ...) rides along
-    valid: jnp.ndarray,  # (n_shards, n) bool
-    mesh,
-    capacity_factor: float = CAPACITY_FACTOR,
-) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Route rows so each key lives on exactly one shard.
-
-    Returns ``(keys, payload, valid, overflow)`` with the same per-shard
-    layout widened to ``capacity_factor * n`` columns; ``overflow`` is a
-    scalar bool — True when some shard received more rows than its
-    capacity (those rows are dropped; re-shuffle with a larger factor).
-    """
-    n_shards, n = keys.shape
-    cap = _capacity(n, capacity_factor)
+@functools.lru_cache(maxsize=None)
+def _routed_fn(mesh, n_shards: int, n: int, cap: int):
+    """Jitted shuffle for one (mesh, layout) — cached so the executor's
+    repeated detect shuffles (and overflow retries at each factor) reuse
+    one jit cache instead of retracing per call."""
     total = n_shards * n
     axes = dp_axes(mesh)
     row_spec = P(axes if len(axes) > 1 else (axes[0] if axes else None))
@@ -106,10 +118,16 @@ def shuffle_by_key(
             .at[slot]
             .set(fp, mode="drop")
         )
+        out_src = (
+            jnp.full(n_shards * cap, total, jnp.int32)
+            .at[slot]
+            .set(jnp.arange(total, dtype=jnp.int32), mode="drop")
+        )
         return (
             out_k.reshape(n_shards, cap),
             out_p.reshape((n_shards, cap) + fp.shape[1:]),
             out_v.reshape(n_shards, cap),
+            out_src.reshape(n_shards, cap),
             overflow,
         )
 
@@ -117,7 +135,29 @@ def shuffle_by_key(
         NamedSharding(mesh, row_spec),
         NamedSharding(mesh, row_spec),
         NamedSharding(mesh, row_spec),
+        NamedSharding(mesh, row_spec),
         NamedSharding(mesh, P()),
     )
+    return jax.jit(impl, out_shardings=out_shardings)
+
+
+def shuffle_by_key(
+    keys: jnp.ndarray,  # (n_shards, n) int
+    payload: jnp.ndarray,  # (n_shards, n, ...) rides along
+    valid: jnp.ndarray,  # (n_shards, n) bool
+    mesh,
+    capacity_factor: float = CAPACITY_FACTOR,
+) -> ShuffleResult:
+    """Route rows so each key lives on exactly one shard.
+
+    Returns a ``ShuffleResult`` with the same per-shard layout widened to
+    ``capacity_factor * n`` columns; ``overflow`` is a scalar bool — True
+    when some shard received more rows than its capacity (those rows are
+    dropped; re-shuffle with a larger factor).  ``src`` maps every routed
+    slot back to its flat source row index (the inverse permutation).
+    """
+    n_shards, n = keys.shape
+    cap = _capacity(n, capacity_factor)
     with mesh:
-        return jax.jit(impl, out_shardings=out_shardings)(keys, payload, valid)
+        out = _routed_fn(mesh, n_shards, n, cap)(keys, payload, valid)
+    return ShuffleResult(*out)

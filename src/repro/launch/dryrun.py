@@ -61,7 +61,8 @@ def _rep(mesh):
 
 def build_cell(arch: str, shape_name: str, mesh, opt_override: Optional[str] = None,
                fsdp: bool = True, microbatch_override: Optional[int] = None,
-               kv_quant: bool = False, dp_only: bool = False):
+               kv_quant: bool = False, dp_only: bool = False,
+               grad_compress: bool = False):
     """Returns (lowered, meta) for one cell."""
     tp = mesh.shape["model"]
     cfg = get_config(arch).canonicalize(tp=1 if dp_only else tp)
@@ -90,7 +91,10 @@ def build_cell(arch: str, shape_name: str, mesh, opt_override: Optional[str] = N
 
     if shape.kind == "train":
         opt_cfg = OptConfig(name=cfg.optimizer)
-        aopt = jax.eval_shape(partial(init_opt_state, cfg=opt_cfg), aparams)
+        aopt = jax.eval_shape(
+            partial(init_opt_state, cfg=opt_cfg, grad_compress=grad_compress),
+            aparams,
+        )
         # moments mirror the param specs (adafactor's factored stats drop
         # the reduced dims from the spec); step is replicated
         ospecs = {}
@@ -118,7 +122,9 @@ def build_cell(arch: str, shape_name: str, mesh, opt_override: Optional[str] = N
         dp_size = int(np.prod([mesh.shape[a] for a in mesh.axis_names
                                if a != "model"]))
         n_micro = max(min(n_micro, shape.global_batch // dp_size), 1)
-        step = make_train_step(cfg, opt_cfg, n_micro=n_micro, mamba_chunk=MAMBA_CHUNK)
+        step = make_train_step(cfg, opt_cfg, n_micro=n_micro, mamba_chunk=MAMBA_CHUNK,
+                               grad_compress=grad_compress,
+                               mesh=mesh if grad_compress else None)
         fn = jax.jit(
             step,
             in_shardings=(pshard, oshard, bshard),
@@ -226,6 +232,14 @@ def analyse(lowered, meta, mesh, shape: ShapeSpec, cfg) -> Dict:
         "model_flops_per_chip": mf_per_chip,
         "useful_flops_ratio": (mf_per_chip / roll.flops) if roll.flops else 0.0,
     }
+    # sharded-detection capacity planning (DESIGN.md §8): what routing this
+    # cell's token stream as detection rows over the mesh's DP extent saves
+    # on the O(n^2) pair scan — reported next to the collective stats above.
+    from repro.dist.detect import default_n_shards, pair_count_report
+
+    out["dc_detect_sharding"] = pair_count_report(
+        shape.global_batch * shape.seq_len, max(default_n_shards(mesh), 1)
+    )
     return out
 
 
@@ -260,6 +274,8 @@ def main():
     ap.add_argument("--microbatches", type=int, default=None)
     ap.add_argument("--kv-quant", action="store_true")
     ap.add_argument("--dp-only", action="store_true")
+    ap.add_argument("--grad-compress", action="store_true",
+                    help="int8 error-feedback gradient all-reduce (train cells)")
     args = ap.parse_args()
 
     cells = []
@@ -276,7 +292,8 @@ def main():
             rec = run_cell(arch, shape_name, args.multi_pod, args.out,
                            fsdp=bool(args.fsdp),
                            microbatch_override=args.microbatches,
-                           kv_quant=args.kv_quant, dp_only=args.dp_only)
+                           kv_quant=args.kv_quant, dp_only=args.dp_only,
+                           grad_compress=args.grad_compress)
             if "skipped" in rec:
                 print(f"[skip] {arch} x {shape_name}: {rec['skipped']}")
                 continue
@@ -287,7 +304,9 @@ def main():
                 f"compute {r['compute_s']:.4f}s | memory {r['memory_s']:.4f}s | "
                 f"collective {r['collective_s']:.4f}s | dominant {r['dominant']} "
                 f"| peak {rec['memory']['peak_bytes']/2**30:.2f} GiB/dev "
-                f"| compile {rec['compile_s']}s"
+                f"| compile {rec['compile_s']}s "
+                f"| dc-pairs {rec['dc_detect_sharding']['pair_savings_x']:.0f}x"
+                f"/{rec['dc_detect_sharding']['n_shards']}sh"
             )
         except Exception as e:
             failures += 1

@@ -5,7 +5,7 @@ State recurrence (per channel c of d_in, per state n of N):
     h_t = exp(dt_t * A[c,n]) * h_{t-1} + dt_t * B_t[n] * x_t[c]
     y_t[c] = sum_n C_t[n] * h_t[c,n] + D[c] * x_t[c]
 
-TPU adaptation (DESIGN.md): the canonical CUDA kernel fuses the sequential
+TPU adaptation (DESIGN.md §5): the canonical CUDA kernel fuses the sequential
 scan in shared memory.  We instead use a **chunked log-space formulation**:
 the sequence is split into chunks of length ``chunk``; within a chunk the
 contribution of every j <= t is computed in closed form from cumulative sums

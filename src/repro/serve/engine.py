@@ -5,7 +5,7 @@ one KV cache tree (slot = batch index).  Requests join free slots; every
 engine step runs ONE fused decode for all active slots; finished sequences
 (EOS or max_len) free their slot.  This is vLLM-style continuous batching
 restricted to static shapes: the cache is a preallocated (slots, S_max)
-region — TPU-friendly, no paging indirection (DESIGN.md notes the paged
+region — TPU-friendly, no paging indirection (DESIGN.md §5 notes the paged
 variant as future kernel work).
 
 Per-slot state is host-side bookkeeping; device state is the cache pytree.

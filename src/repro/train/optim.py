@@ -42,15 +42,18 @@ def lr_at(cfg: OptConfig, step: jnp.ndarray) -> jnp.ndarray:
     return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
 
 
-def init_opt_state(params, cfg: OptConfig) -> Dict:
+def init_opt_state(params, cfg: OptConfig, grad_compress: bool = False) -> Dict:
+    """``grad_compress`` adds the int8 all-reduce's error-feedback residual
+    ``gerr`` (f32, param-shaped — the param PartitionSpecs apply) so the
+    quantization error carries across steps (train/steps.py opt-in)."""
     mdt = jnp.bfloat16 if cfg.name == "adamw_bf16" else jnp.float32
     if cfg.name in ("adamw", "adamw_bf16"):
-        return {
+        state = {
             "step": jnp.zeros((), jnp.int32),
             "m": jax.tree.map(lambda p: jnp.zeros(p.shape, mdt), params),
             "v": jax.tree.map(lambda p: jnp.zeros(p.shape, mdt), params),
         }
-    if cfg.name == "adafactor":
+    elif cfg.name == "adafactor":
         def vr(p):
             if p.ndim >= 2:
                 return jnp.zeros(p.shape[:-1], jnp.float32)
@@ -61,12 +64,18 @@ def init_opt_state(params, cfg: OptConfig) -> Dict:
                 return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
             return jnp.zeros((), jnp.float32)
 
-        return {
+        state = {
             "step": jnp.zeros((), jnp.int32),
             "vr": jax.tree.map(vr, params),
             "vc": jax.tree.map(vc, params),
         }
-    raise ValueError(cfg.name)
+    else:
+        raise ValueError(cfg.name)
+    if grad_compress:
+        state["gerr"] = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+    return state
 
 
 def global_norm(tree) -> jnp.ndarray:

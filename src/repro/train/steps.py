@@ -26,8 +26,23 @@ def make_train_step(
     opt_cfg: OptConfig,
     n_micro: int = 1,
     mamba_chunk: int = 128,
+    grad_compress: bool = False,
+    mesh=None,
 ) -> Callable:
-    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``grad_compress`` (opt-in, needs ``mesh``) routes the accumulated
+    gradients through the int8 error-feedback all-reduce
+    (dist/collectives.py): the quantize -> mean-reduce -> dequantize
+    numerics run end-to-end in the step and the residual carries across
+    steps in ``opt_state["gerr"]`` (init_opt_state(grad_compress=True)),
+    so convergence under the lossy wire format is measurable.  Under
+    GSPMD the gradients enter already globally reduced, so this models
+    the compression exactly but does not yet shrink bytes-on-wire — that
+    needs the manual-DP fusion noted in the collectives module docstring.
+    """
+    if grad_compress and mesh is None:
+        raise ValueError("grad_compress=True requires a mesh")
 
     def micro_loss(params, micro_batch):
         return loss_fn(params, cfg, micro_batch, mamba_chunk=mamba_chunk)
@@ -44,7 +59,7 @@ def make_train_step(
             )
             # accumulate in f32 when masters are f32; bf16 masters (the
             # 340B/398B single-pod fit path) accumulate in bf16 to halve the
-            # gradient buffer (documented tradeoff, DESIGN.md §2)
+            # gradient buffer (documented tradeoff, DESIGN.md §5)
             acc_dt = jax.tree.leaves(params)[0].dtype
             grad_zero = jax.tree.map(
                 lambda p: jnp.zeros(p.shape, acc_dt), params
@@ -64,9 +79,24 @@ def make_train_step(
                 acc_body, (grad_zero, jnp.float32(0.0)), micro
             )
             metrics = {}
+        new_err = None
+        if grad_compress:
+            from repro.dist.collectives import grad_allreduce_compressed
+
+            if "gerr" not in opt_state:
+                raise ValueError(
+                    "grad_compress=True needs the error-feedback residual "
+                    "opt_state['gerr']: initialize with "
+                    "init_opt_state(..., grad_compress=True)"
+                )
+            grads, new_err = grad_allreduce_compressed(
+                grads, opt_state["gerr"], mesh
+            )
         new_params, new_opt, opt_metrics = apply_updates(
             params, grads, opt_state, opt_cfg
         )
+        if new_err is not None:
+            new_opt["gerr"] = new_err
         out = {"loss": loss, **opt_metrics}
         return new_params, new_opt, out
 

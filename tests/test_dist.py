@@ -119,10 +119,10 @@ _SUBPROCESS_TEST = textwrap.dedent("""
     payload = np.stack([keys, rng.integers(0, 99, (4, 32)).astype(np.int32)], -1)
     payload[..., 0] = keys
     valid = rng.random((4, 32)) < 0.9
-    k2, p2, v2, ovf = shuffle_by_key(
+    k2, p2, v2, src, ovf = shuffle_by_key(
         jnp.asarray(keys), jnp.asarray(payload), jnp.asarray(valid), mesh
     )
-    k2, v2 = np.asarray(k2), np.asarray(v2)
+    k2, v2, src = np.asarray(k2), np.asarray(v2), np.asarray(src)
     assert not bool(ovf)
     # every key lives on exactly one shard
     for key in np.unique(keys[valid]):
@@ -130,8 +130,12 @@ _SUBPROCESS_TEST = textwrap.dedent("""
         assert len(shards) == 1, (key, shards)
     # row conservation
     assert v2.sum() == valid.sum()
+    # src is the inverse permutation: routed keys match their source rows
+    fk = keys.reshape(-1)
+    assert (fk[src[v2]] == k2[v2]).all()
+    assert len(set(src[v2].tolist())) == int(v2.sum())  # no slot shares a source
     # matches the host reference semantics shard-for-shard
-    hk, hp, hv, hovf = shuffle_by_key_host(keys, payload, valid, 4)
+    hk, hp, hv, hsrc, hovf = shuffle_by_key_host(keys, payload, valid, 4)
     for s in range(4):
         assert sorted(k2[s][v2[s]].tolist()) == sorted(hk[s][hv[s]].tolist())
 

@@ -113,12 +113,15 @@ class TestShuffleHostReference:
         keys = rng.integers(0, 17, (4, 24)).astype(np.int32)
         payload = keys[..., None]
         valid = rng.random((4, 24)) < 0.8
-        ok, op, ov, ovf = shuffle_by_key_host(keys, payload, valid, 4)
+        ok, op, ov, osrc, ovf = shuffle_by_key_host(keys, payload, valid, 4)
         assert not ovf
         for key in np.unique(keys[valid]):
             shards = [s for s in range(4) if (ok[s][ov[s]] == key).any()]
             assert shards == [int(key) % 4]
         assert ov.sum() == valid.sum()
+        # inverse permutation: every occupied slot points at its source row
+        assert (keys.reshape(-1)[osrc[ov]] == ok[ov]).all()
+        assert len(set(osrc[ov].tolist())) == int(ov.sum())
 
     def test_overflow_flagged_and_rows_dropped(self):
         # every row carries the same key -> one shard gets all 32 rows but
@@ -126,7 +129,7 @@ class TestShuffleHostReference:
         keys = np.full((4, 8), 3, np.int32)
         payload = keys[..., None]
         valid = np.ones((4, 8), bool)
-        ok, op, ov, ovf = shuffle_by_key_host(keys, payload, valid, 4,
-                                              capacity_factor=0.5)
+        ok, op, ov, osrc, ovf = shuffle_by_key_host(keys, payload, valid, 4,
+                                                    capacity_factor=0.5)
         assert ovf
         assert ov.sum() == 4 and ov[3].sum() == 4

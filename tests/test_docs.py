@@ -1,0 +1,28 @@
+"""Docs cannot rot: every ``DESIGN.md §N`` citation in src/ must resolve
+to a real section header (tools/check_docs.py — also a CI docs job)."""
+
+import importlib.util
+import os
+
+_spec = importlib.util.spec_from_file_location(
+    "check_docs",
+    os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "tools",
+        "check_docs.py",
+    ),
+)
+check_docs = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_docs)
+
+
+def test_design_sections_resolve():
+    assert check_docs.check() == []
+
+
+def test_design_citations_exist_at_all():
+    """The checker is not vacuous: src/ really does cite DESIGN.md."""
+    cites = check_docs.cited_sections()
+    assert cites, "no DESIGN.md citations found under src/"
+    # the sections this PR wrote for the long-standing citations
+    assert {"2", "4", "7", "8"} <= set(cites)

@@ -1,0 +1,67 @@
+#!/usr/bin/env python
+"""Fail when src/ cites a DESIGN.md section that has no matching header.
+
+Docstrings reference design sections as ``DESIGN.md §N``; DESIGN.md marks
+section headers as ``## §N Title``.  This check keeps the two in sync the
+same way the collect-only CI job keeps imports in sync: a citation to a
+section that was renumbered or never written fails in seconds.
+
+Run from the repo root (CI docs job and tests/test_docs.py both do):
+
+    python tools/check_docs.py
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+CITE = re.compile(r"DESIGN\.md\s*§(\d+)")
+HEADER = re.compile(r"^#+\s*§(\d+)\b", re.M)
+
+
+def cited_sections() -> dict[str, set[str]]:
+    """section number -> files citing it."""
+    cites: dict[str, set[str]] = {}
+    for path in sorted((ROOT / "src").rglob("*.py")):
+        for num in CITE.findall(path.read_text()):
+            cites.setdefault(num, set()).add(str(path.relative_to(ROOT)))
+    return cites
+
+
+def check() -> list[str]:
+    problems = []
+    design = ROOT / "DESIGN.md"
+    if not design.exists():
+        return ["DESIGN.md does not exist but src/ docstrings cite it"]
+    headers = set(HEADER.findall(design.read_text()))
+    for num, files in sorted(cited_sections().items(), key=lambda kv: int(kv[0])):
+        if num not in headers:
+            problems.append(
+                f"DESIGN.md §{num} is cited by {', '.join(sorted(files))} "
+                f"but DESIGN.md has no '§{num}' header"
+            )
+    if not (ROOT / "README.md").exists():
+        problems.append("README.md does not exist")
+    return problems
+
+
+def main() -> int:
+    problems = check()
+    for p in problems:
+        print(f"ERROR: {p}", file=sys.stderr)
+    if not problems:
+        cites = cited_sections()
+        total = sum(len(v) for v in cites.values())
+        print(
+            f"docs OK: {len(cites)} DESIGN.md sections cited from "
+            f"{total} file references"
+        )
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
