@@ -21,6 +21,7 @@ from benchmarks import (
     fig11_violation_scaling,
     fig12_dc_inequality,
     fig13_join_queries,
+    serve_throughput,
     table5_accuracy,
     table8_exploratory,
 )
@@ -33,6 +34,7 @@ MODULES = [
     ("fig11", fig11_violation_scaling),
     ("fig12", fig12_dc_inequality),
     ("fig13", fig13_join_queries),
+    ("serve", serve_throughput),
     ("table5", table5_accuracy),
     ("table8", table8_exploratory),
 ]

@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import threading
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
@@ -86,6 +87,11 @@ class StepReport:
     alg2_accuracy: float = 1.0
     alg2_support: float = 0.0
 
+    def asdict(self) -> Dict[str, object]:
+        """Plain-scalar dict (all fields are host ints/floats/strs/bools), so
+        service metrics can ship reports through json without touching jax."""
+        return dataclasses.asdict(self)
+
 
 @dataclasses.dataclass
 class ExecReport:
@@ -94,6 +100,9 @@ class ExecReport:
     result_size: int = 0
     recheck_violations: int = 0
     join_overflow: bool = False
+
+    def asdict(self) -> Dict[str, object]:
+        return dataclasses.asdict(self)
 
 
 @dataclasses.dataclass
@@ -119,8 +128,38 @@ class Daisy:
         self.stats: Dict[Tuple[str, str], object] = {}
         self.cost: Dict[Tuple[str, str], CostModel] = {}
         self.checked_partitions: Dict[Tuple[str, str], int] = {}
+        # serving hooks (DESIGN.md §9): a monotone version counter bumped on
+        # every candidate-merge / checked-bit commit (the service cache's
+        # invalidation signal), cumulative detect/repair invocation counters
+        # (the work the cache amortizes), and a re-entrancy lock so concurrent
+        # sessions can share one executor without torn read-modify-writes of
+        # ``self.db``.
+        self._clean_version = 0
+        self.detect_calls = 0
+        self.repair_calls = 0
+        self._lock = threading.RLock()
         if self.config.collect_stats:
             self._collect_stats()
+
+    @property
+    def clean_version(self) -> int:
+        """Monotone clean-state version: equal versions guarantee bit-identical
+        query answers (the cleaning steps of a re-executed query skip, so the
+        answer is a pure function of the instance — the cache soundness
+        contract, asserted in tests/test_service.py)."""
+        return self._clean_version
+
+    def _apply(self, rel: Relation, deltas) -> Relation:
+        """``apply_candidates`` + version bump (every overlay merge advances
+        the probabilistic instance)."""
+        self._clean_version += 1
+        return apply_candidates(rel, deltas)
+
+    def _mark(self, rel: Relation, rule_name: str, scope) -> Relation:
+        """``mark_checked`` + version bump (checked bits steer future cleaning,
+        so they are part of the versioned state)."""
+        self._clean_version += 1
+        return mark_checked(rel, rule_name, scope)
 
     # ------------------------------------------------------------ statistics
     def _collect_stats(self) -> None:
@@ -218,16 +257,18 @@ class Daisy:
                 cm.record(rep.answer_size, rep.extra, 0.0, 0)
             return
         mesh = self._detect_mesh(step)
+        self.detect_calls += 1
         det = detect_fd_auto(
             rel, fd, scope, k=self.config.k,
             mesh=mesh, n_shards=self.config.detect_shards,
         )
         if will_shard(fd, mesh, self.config.detect_shards):
             rep.detect_path = "sharded"
+        self.repair_calls += 1
         deltas = fd_repair_candidates(rel, fd, det, repair_scope)
         rep.repaired = int(np.asarray(jnp.sum(det.violated & repair_scope)))
-        rel = apply_candidates(rel, deltas)
-        rel = mark_checked(rel, fd.name, scope)
+        rel = self._apply(rel, deltas)
+        rel = self._mark(rel, fd.name, scope)
         self.db[table] = rel
         if cm:
             d_i = float(np.asarray(jnp.sum(scope)))
@@ -264,6 +305,23 @@ class Daisy:
             mode = "incremental"
         rep.mode = mode
 
+        # idempotence gate (the DC analogue of the FD dirty-group skip): when
+        # everything this step would scope is already checked for the rule,
+        # the query that checked it also repaired its DC partners, so
+        # re-detecting would only re-merge the same evidence — double-counting
+        # candidate support and advancing clean_version for no state change.
+        # Repeated queries therefore skip, keeping answers version-stable
+        # (the service cache's contract, DESIGN.md §9).
+        live = unchecked(rel, dc.name)
+        if mode != "full":
+            live = live & answer
+        if not bool(np.asarray(jnp.any(live))):
+            rep.mode = "skipped"
+            report.steps.append(rep)
+            if cm:
+                cm.record(rep.answer_size, 0, 0.0, 0)
+            return
+
         if mode == "full":
             row_scope = rel.valid
             col_scope = rel.valid
@@ -274,30 +332,34 @@ class Daisy:
         mesh = self._detect_mesh(step)
         if will_shard(dc, mesh, self.config.detect_shards):
             rep.detect_path = "sharded"
+        self.detect_calls += 1
         det = detect_dc_auto(
             rel, dc, row_scope, col_scope, block=self.config.dc_block,
             mesh=mesh, n_shards=self.config.detect_shards,
         )
+        self.repair_calls += 1
         deltas = dc_repair_candidates(rel, dc, det, row_scope, k=self.config.k)
         repaired = (det.t1_count > 0) | (det.t2_count > 0)
         rep.repaired = int(np.asarray(jnp.sum(repaired & row_scope)))
-        rel = apply_candidates(rel, deltas)
+        rel = self._apply(rel, deltas)
 
         if mode == "incremental":
             # partners of the answer (the DC-correlated tuples, §4.2) get their
             # role fixes too — the incremental matrix strip [rest x answer].
             partner_scope = rel.valid & ~answer
+            self.detect_calls += 1
             det2 = detect_dc_auto(
                 rel, dc, partner_scope, answer, block=self.config.dc_block,
                 mesh=mesh, n_shards=self.config.detect_shards,
             )
+            self.repair_calls += 1
             deltas2 = dc_repair_candidates(rel, dc, det2, partner_scope, k=self.config.k)
-            rel = apply_candidates(rel, deltas2)
+            rel = self._apply(rel, deltas2)
             rep.extra = int(
                 np.asarray(jnp.sum(((det2.t1_count > 0) | (det2.t2_count > 0)) & partner_scope))
             )
 
-        rel = mark_checked(rel, dc.name, row_scope if mode != "full" else rel.valid)
+        rel = self._mark(rel, dc.name, row_scope if mode != "full" else rel.valid)
         self.db[table] = rel
         # support bookkeeping: diagonal partitions covered by this query
         p = self.config.dc_partitions
@@ -321,15 +383,20 @@ class Daisy:
                 self._clean_dc(step, report)
 
     def execute(self, query: Query) -> DaisyResult:
-        plan = plan_query(
-            query, self.rules, self._want_full(),
-            lemma1_fast_path=self.config.lemma1_fast_path,
-        )
-        report = ExecReport(notes=list(plan.notes))
+        # re-entrant: many serving sessions may share one executor; the lock
+        # serializes the read-modify-write of self.db / cost / version state
+        # so concurrent callers interleave at query granularity (candidate
+        # merges stay Lemma-4 order-independent either way).
+        with self._lock:
+            plan = plan_query(
+                query, self.rules, self._want_full(),
+                lemma1_fast_path=self.config.lemma1_fast_path,
+            )
+            report = ExecReport(notes=list(plan.notes))
 
-        if not query.joins:
-            return self._execute_sp(query, plan, report)
-        return self._execute_join(query, plan, report)
+            if not query.joins:
+                return self._execute_sp(query, plan, report)
+            return self._execute_join(query, plan, report)
 
     # ----------------------------------------------------------- SP queries
     def _execute_sp(self, query: Query, plan: PlanInfo, report: ExecReport) -> DaisyResult:
@@ -470,6 +537,7 @@ class Daisy:
             ].set(True, mode="drop")
             for rule in self.rules.get(table, ()):
                 if isinstance(rule, FD):
+                    self.detect_calls += 1
                     det = detect_fd(rel, rule, used & rel.valid, k=self.config.k)
                     fresh = det.violated & unchecked(rel, rule.name)
                     total += int(np.asarray(jnp.sum(fresh)))

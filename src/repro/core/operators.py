@@ -26,7 +26,8 @@ arrays + overflow flag for joins (jnp.nonzero with static size).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Sequence, Tuple
+import hashlib
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -83,6 +84,49 @@ class Query:
             if self.groupby.value:
                 out.append(self.groupby.value)
         return tuple(dict.fromkeys(out))
+
+
+# ----------------------------------------------------------- fingerprinting
+def _fp_value(v) -> str:
+    """Canonical token for a predicate constant: bools/ints by value, floats
+    by exact bit pattern (hex), so equal constants always tokenize equally
+    while 1 and 1.0000001 never collide."""
+    if isinstance(v, (bool, np.bool_)):
+        return f"b{int(v)}"
+    if isinstance(v, (int, np.integer)):
+        return f"i{int(v)}"
+    return f"f{float(v).hex()}"
+
+
+def _fp_preds(preds: Sequence[Pred]) -> List[Tuple[str, str, str]]:
+    return sorted((p.col, p.op, _fp_value(p.value)) for p in preds)
+
+
+def query_fingerprint(query: Query) -> str:
+    """Stable fingerprint of a query's logical content (DESIGN.md §9).
+
+    The service cache keys on ``(fingerprint, clean_version)``, so this must
+    be deterministic across processes — hashlib over a canonical token
+    stream, never ``hash()`` (PYTHONHASHSEED).  Conjunctive predicates are
+    order-normalized (AND commutes); join order is preserved because it
+    decides capacity truncation and is therefore answer-relevant.
+    """
+    parts: List[str] = ["T", query.table]
+    # projection feeds Query.attrs and hence the planner's rule-overlap
+    # decision, so it is state-trajectory-relevant even though it never
+    # filters rows; list order is not (attrs dedups into a set check).
+    for col in sorted(query.project):
+        parts += ["R", col]
+    for col, op, val in _fp_preds(query.preds):
+        parts += ["P", col, op, val]
+    for j in query.joins:
+        parts += ["J", j.right, j.left_on, j.right_on]
+        for col, op, val in _fp_preds(j.right_preds):
+            parts += ["P", col, op, val]
+    g = query.groupby
+    if g is not None:
+        parts += ["G", ",".join(g.keys), g.agg, g.value or "", g.table or ""]
+    return hashlib.sha256("\x1f".join(parts).encode()).hexdigest()[:16]
 
 
 # ----------------------------------------------------------------- results

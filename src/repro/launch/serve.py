@@ -1,6 +1,20 @@
-"""Serving driver: batched continuous-batching engine over a reduced model.
+"""Serving drivers.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --requests 6
+Two workloads share this entry point:
+
+* ``--workload decode``  (default) the batched continuous-batching LLM
+  decode engine over a reduced model:
+
+      PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --requests 6
+
+* ``--workload queries``  a synthetic multi-user analytical workload over
+  the query service (repro.service, DESIGN.md §9): many sessions issue
+  repeated exploratory queries against one shared, gradually-cleaned
+  Daisy instance; the driver prints throughput, cache effectiveness, and
+  the detect/repair work amortized per query:
+
+      PYTHONPATH=src python -m repro.launch.serve --workload queries \\
+          --sessions 8 --requests 40 --rows 2048
 """
 
 from __future__ import annotations
@@ -8,22 +22,15 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax
 import numpy as np
 
-from repro.configs import get_config
-from repro.models.params import init_params
-from repro.serve.engine import Request, ServeEngine
 
+def run_decode(args) -> None:
+    import jax
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3-4b")
-    ap.add_argument("--requests", type=int, default=6)
-    ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--max-batch", type=int, default=4)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    from repro.configs import get_config
+    from repro.models.params import init_params
+    from repro.serve.engine import Request, ServeEngine
 
     cfg = get_config(args.arch, reduced=True).canonicalize(tp=1)
     params = init_params(jax.random.key(args.seed), cfg)
@@ -45,6 +52,80 @@ def main():
           f"({total_new/dt:.1f} tok/s fused batch)")
     for r in reqs[:3]:
         print(f"  req {r.rid}: prompt {len(r.prompt)} toks -> {r.out[:8]}...")
+
+
+def run_queries(args) -> None:
+    from repro.core.constraints import FD
+    from repro.core.executor import Daisy, DaisyConfig
+    from repro.core.operators import GroupBySpec, Pred, Query
+    from repro.core.relation import make_relation
+    from repro.data.generators import hospital_like
+    from repro.service import QueryServer
+
+    ds = hospital_like(args.rows, error_frac=0.1, seed=args.seed)
+    rel = make_relation(ds.data, overlay=["zip", "city"], k=8, rules=["zc"])
+    daisy = Daisy(
+        {"h": rel}, {"h": [FD("zc", "zip", "city")]},
+        DaisyConfig(use_cost_model=False, expected_queries=args.requests),
+    )
+    server = QueryServer(daisy, max_batch=args.max_batch)
+
+    # exploratory pool: per-neighborhood selections + one overview group-by;
+    # users revisit the same views over and over (Table 8's access pattern)
+    n_zip = max(args.rows // 20, 4)
+    pool = [Query("h", preds=(Pred("zip", "==", g),)) for g in range(n_zip)]
+    pool.append(Query("h", groupby=GroupBySpec(keys=("city",), agg="count")))
+
+    rng = np.random.default_rng(args.seed)
+    # the whole workload is submitted before drain(), so size the per-user
+    # inflight bound to the share each session will queue
+    inflight = max(args.requests // args.sessions + 1, 1)
+    sessions = [
+        server.open_session(f"user{i}", max_inflight=inflight)
+        for i in range(args.sessions)
+    ]
+    for i in range(args.requests):
+        session = sessions[i % args.sessions]
+        # zipf-ish revisit pattern: hot views dominate
+        idx = min(int(rng.zipf(1.7)) - 1, len(pool) - 1)
+        server.submit(session, pool[idx])
+    t0 = time.perf_counter()
+    server.drain()
+    dt = time.perf_counter() - t0
+
+    snap = server.snapshot()
+    print(
+        f"served {snap['queries']} queries from {args.sessions} sessions in "
+        f"{dt:.2f}s ({snap['queries']/dt:.1f} q/s)"
+    )
+    print(
+        f"  executions {snap['executions']}  cache hits {snap['cache_hits']} "
+        f"(hit rate {snap['hit_rate']:.0%})  clean_version {snap['clean_version']}"
+    )
+    print(
+        f"  detect {snap['detect_calls']} / repair {snap['repair_calls']} "
+        f"-> {snap['detect_repair_per_query']} invocations amortized per query"
+    )
+    for s in snap["sessions"][:4]:
+        print(f"  {s['sid']}: answered {s['answered']} "
+              f"({s['cached_answers']} from cache)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workload", choices=("decode", "queries"), default="decode")
+    ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--sessions", type=int, default=4)
+    ap.add_argument("--rows", type=int, default=1024)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    if args.workload == "queries":
+        run_queries(args)
+    else:
+        run_decode(args)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,42 @@
+"""repro.service — concurrent query serving over the gradually-cleaned
+probabilistic instance (DESIGN.md §9).
+
+The paper's engine cleans *on demand*, driven by the queries users perform;
+this package is the layer that takes a stream of analytical queries from
+many sessions and shares one Daisy instance — and the cleaning work —
+between them:
+
+* ``server``     continuous-batching step loop (after serve/engine.py)
+                 over a thread-safe submission queue;
+* ``scheduler``  tickets + rule/cluster batching so one clean_sigma pass
+                 pays for a whole batch of overlapping-σ queries;
+* ``cache``      clean-state-aware result cache keyed on
+                 (query fingerprint, clean_version);
+* ``session``    per-user identity, lineage, and admission limits;
+* ``metrics``    queries/sec, cache effectiveness, detect/repair work
+                 amortized per query.
+
+Sharing is sound because candidate-overlay merges are commutative and
+associative (Lemma 4, core/update.py) and the executor's checked-bit
+bookkeeping makes re-cleaning a no-op — concurrent sessions converge on
+one clean state, and equal ``clean_version``s guarantee bit-identical
+answers.
+"""
+
+from repro.service.cache import ResultCache
+from repro.service.metrics import ServiceMetrics
+from repro.service.scheduler import Ticket, batch_tickets, cluster_key
+from repro.service.server import QueryServer
+from repro.service.session import LineageEntry, Session, SessionLimitError
+
+__all__ = [
+    "LineageEntry",
+    "QueryServer",
+    "ResultCache",
+    "ServiceMetrics",
+    "Session",
+    "SessionLimitError",
+    "Ticket",
+    "batch_tickets",
+    "cluster_key",
+]

@@ -1,0 +1,82 @@
+"""Clean-state-aware result cache (DESIGN.md §9).
+
+Entries key on ``(query fingerprint, clean_version)``.  The executor bumps
+``Daisy.clean_version`` on every candidate-overlay merge and checked-bit
+commit, and its cleaning steps *skip* — no state change, no bump — whenever
+a query's scope is already checked for the rule.  Re-executing a query at
+an unchanged version is therefore a pure function of the probabilistic
+instance and returns bit-identical answers (the soundness contract,
+asserted in tests/test_service.py), so a hit never serves a stale answer:
+any cleaning progress since the entry was stored moved the version and
+invalidates the entry exactly then.
+
+Entries store the *post*-execution version — the version the instance held
+when the answer was computed (``execute`` may itself advance the version
+while cleaning for the query; the answer reflects the advanced state).
+
+Cached ``DaisyResult``s are shared by reference across sessions; they are
+treated as immutable (device arrays + a report nobody mutates).
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Dict, Optional, Tuple
+
+
+class ResultCache:
+    """LRU over (fingerprint -> (clean_version, result))."""
+
+    def __init__(self, capacity: int = 256):
+        if capacity < 1:
+            raise ValueError("cache capacity must be >= 1")
+        self.capacity = capacity
+        self._entries: "OrderedDict[str, Tuple[int, object]]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.stale = 0  # fingerprint present but clean_version moved on
+        self.evictions = 0
+
+    def get(self, fingerprint: str, clean_version: int) -> Optional[object]:
+        entry = self._entries.get(fingerprint)
+        if entry is None:
+            self.misses += 1
+            return None
+        version, result = entry
+        if version != clean_version:
+            # the instance advanced: the stored answer may no longer equal a
+            # fresh execution — drop it (re-insertion re-validates).  pop()
+            # rather than del: a second step thread may have dropped it first
+            # (stats can under/over-count under that misuse, lookups cannot
+            # throw).
+            self.stale += 1
+            self.misses += 1
+            self._entries.pop(fingerprint, None)
+            return None
+        self.hits += 1
+        self._entries.move_to_end(fingerprint)
+        return result
+
+    def put(self, fingerprint: str, clean_version: int, result: object) -> None:
+        self._entries[fingerprint] = (clean_version, result)
+        self._entries.move_to_end(fingerprint)
+        while len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+            self.evictions += 1
+
+    def version_of(self, fingerprint: str) -> Optional[int]:
+        entry = self._entries.get(fingerprint)
+        return None if entry is None else entry[0]
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def stats(self) -> Dict[str, int]:
+        return {
+            "entries": len(self._entries),
+            "capacity": self.capacity,
+            "hits": self.hits,
+            "misses": self.misses,
+            "stale": self.stale,
+            "evictions": self.evictions,
+        }

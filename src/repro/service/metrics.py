@@ -1,0 +1,97 @@
+"""Serving metrics (DESIGN.md §9): throughput, cache effectiveness, and the
+cleaning work one shared probabilistic instance amortizes across sessions.
+
+All counters are plain host ints mutated by the single serving thread (the
+step loop), so ``snapshot()`` is always self-consistent; it returns only
+JSON-serializable scalars plus the last few serialized ``StepReport`` dicts
+(``StepReport.asdict``) for drill-down.  The interesting derived number is
+``detect_repair_per_query``: detect/repair invocations divided by queries
+answered — the paper's incremental-cleaning cost, amortized further by the
+clean-state-aware cache (benchmarks/serve_throughput.py plots it against
+the cacheless and offline baselines).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List
+
+
+@dataclasses.dataclass
+class ServiceMetrics:
+    queries: int = 0  # tickets answered (hit or executed)
+    steps: int = 0  # step-loop iterations that served >= 1 ticket
+    executions: int = 0  # Daisy.execute calls (cache misses)
+    cache_hits: int = 0
+    batched: int = 0  # hits on a fingerprint executed earlier in the same step
+    detect_calls: int = 0  # executor detect invocations while serving
+    repair_calls: int = 0
+    clean_steps: int = 0  # non-skipped cleaning steps across executions
+    skipped_steps: int = 0
+    rejected: int = 0  # session-limit denials
+    errors: int = 0
+    max_reports: int = 32
+    recent_reports: List[Dict[str, object]] = dataclasses.field(default_factory=list)
+    started: float = dataclasses.field(default_factory=time.perf_counter)
+
+    # ------------------------------------------------------------ observers
+    def observe_hit(self, same_step: bool) -> None:
+        self.queries += 1
+        self.cache_hits += 1
+        if same_step:
+            self.batched += 1
+
+    def observe_execution(self, report) -> None:
+        """Record one cache-miss execution from its ``ExecReport``."""
+        self.queries += 1
+        self.executions += 1
+        for step in report.steps:
+            if step.mode == "skipped":
+                self.skipped_steps += 1
+            else:
+                self.clean_steps += 1
+        self.recent_reports.append(report.asdict())
+        del self.recent_reports[: -self.max_reports]
+
+    def observe_work(self, detect_delta: int, repair_delta: int) -> None:
+        self.detect_calls += detect_delta
+        self.repair_calls += repair_delta
+
+    # -------------------------------------------------------------- derived
+    @property
+    def elapsed(self) -> float:
+        return max(time.perf_counter() - self.started, 1e-9)
+
+    @property
+    def queries_per_sec(self) -> float:
+        return self.queries / self.elapsed
+
+    @property
+    def hit_rate(self) -> float:
+        return self.cache_hits / max(self.queries, 1)
+
+    @property
+    def detect_repair_per_query(self) -> float:
+        """Cleaning work amortized per answered query."""
+        return (self.detect_calls + self.repair_calls) / max(self.queries, 1)
+
+    def snapshot(self) -> Dict[str, object]:
+        return {
+            "queries": self.queries,
+            "steps": self.steps,
+            "executions": self.executions,
+            "cache_hits": self.cache_hits,
+            "batched": self.batched,
+            "detect_calls": self.detect_calls,
+            "repair_calls": self.repair_calls,
+            "clean_steps": self.clean_steps,
+            "skipped_steps": self.skipped_steps,
+            "rejected": self.rejected,
+            "errors": self.errors,
+            "elapsed_s": round(self.elapsed, 6),
+            "queries_per_sec": round(self.queries_per_sec, 3),
+            "hit_rate": round(self.hit_rate, 4),
+            "detect_repair_per_query": round(self.detect_repair_per_query, 4),
+            "recent_reports": list(self.recent_reports),
+        }

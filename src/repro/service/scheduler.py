@@ -1,0 +1,94 @@
+"""Admission + rule/cluster batching for the query server (DESIGN.md §9).
+
+A ``Ticket`` is one session's query in flight.  ``batch_tickets`` groups
+the tickets admitted into one server step by *cluster key*: the rules the
+query overlaps ((X u Y) n (P u W) != {}, §4.1) plus the σ of its equality
+predicates on rule attributes — the selection that relaxation expands to a
+correlated cluster.  Tickets sharing a cluster run back-to-back, so one
+``clean_sigma`` pass pays for the whole batch: the first execution
+detects/repairs the cluster and marks it checked; every later ticket in
+the group either hits the clean-state-aware cache (identical fingerprint
+at an unchanged version) or executes with its cleaning steps skipped
+(checked-bit bookkeeping, §4.3).  Groups keep first-arrival order and
+tickets keep arrival order within a group, so scheduling only ever pulls
+same-cluster work together; the equivalence tests assert the batched
+answers stay bit-identical to a serial fresh-instance run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.constraints import overlaps_query, rule_attrs
+from repro.core.operators import Query, _fp_value
+from repro.service.session import Session
+
+
+@dataclasses.dataclass
+class Ticket:
+    """One submitted query: filled in by the serving thread, waited on by the
+    submitting session's thread."""
+
+    seq: int
+    session: Session
+    query: Query
+    fingerprint: str
+    event: threading.Event = dataclasses.field(default_factory=threading.Event)
+    result: Optional[object] = None  # DaisyResult once served
+    cached: bool = False
+    clean_version: Optional[int] = None
+    error: Optional[BaseException] = None
+
+    def wait(self, timeout: Optional[float] = None):
+        """Block until served; returns the ``DaisyResult`` or raises the
+        execution error.  Raises ``TimeoutError`` if the server did not
+        answer in time."""
+        if not self.event.wait(timeout):
+            raise TimeoutError(f"ticket {self.seq} not served within {timeout}s")
+        if self.error is not None:
+            raise self.error
+        return self.result
+
+
+def cluster_key(query: Query, rules: Dict[str, Sequence]) -> Tuple:
+    """The (rules, σ) cluster a query's cleaning work belongs to.
+
+    Two queries share a key iff they overlap the same rules on the same
+    tables and filter rule attributes with the same equality σ — exactly
+    when their relaxations expand to the same correlated cluster and the
+    first execution's detect/repair pass covers both.  Queries overlapping
+    no rule cluster by fingerprint alone (nothing to share but the cache).
+    """
+    tables = (query.table,) + tuple(j.right for j in query.joins)
+    attrs = query.attrs
+    overlapping: List[Tuple[str, str]] = []
+    rule_cols: set = set()
+    for t in tables:
+        for rule in rules.get(t, ()):
+            if overlaps_query(rule, attrs):
+                overlapping.append((t, rule.name))
+                rule_cols.update(rule_attrs(rule))
+    sigma = tuple(
+        sorted(
+            (p.col, p.op, _fp_value(p.value))
+            for p in query.preds
+            if p.col in rule_cols and p.op == "=="
+        )
+    )
+    return (tuple(overlapping), sigma)
+
+
+def batch_tickets(
+    tickets: Sequence[Ticket], rules: Dict[str, Sequence]
+) -> List[List[Ticket]]:
+    """Group one step's tickets by cluster, first-arrival order throughout."""
+    groups: "OrderedDict[Tuple, List[Ticket]]" = OrderedDict()
+    for ticket in tickets:
+        key = cluster_key(ticket.query, rules)
+        if key == ((), ()):  # no rule overlap: share only via the cache
+            key = ("fp", ticket.fingerprint)
+        groups.setdefault(key, []).append(ticket)
+    return list(groups.values())

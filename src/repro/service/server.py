@@ -1,0 +1,188 @@
+"""Concurrent query serving over one shared Daisy instance (DESIGN.md §9).
+
+The step loop is continuous batching in the spirit of
+``serve/engine.py``'s slot table: submitted tickets queue in arrival
+order; every ``step`` admits up to ``max_batch`` tickets, orders them by
+cluster (``scheduler.batch_tickets``), and serves each through the
+clean-state-aware cache or the shared executor.  Admission happens every
+step — sessions never wait for a "round" to finish.
+
+Threading model: ``submit`` is fully thread-safe (many client threads,
+one condition-guarded queue); the step loop is intended to run on ONE
+serving thread (``run``), which makes batching deterministic.  The
+executor itself is re-entrant (``Daisy.execute`` locks), so even misuse —
+multiple step threads — degrades to query-granularity interleaving rather
+than torn state.
+
+Serving a ticket: consult the cache at the *current* clean version; on a
+hit the answer is returned without touching the executor (this is where
+repeated exploratory workloads win); on a miss the shared executor runs
+the query — cleaning the gradually-cleaned instance as a side effect —
+and the answer is cached at the post-execution version.  Duplicate
+fingerprints inside one step resolve the same way: the first execution's
+version is current for the second ticket unless an intervening execution
+advanced the instance, in which case the duplicate re-executes exactly as
+a serial run would.
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+from repro.core.executor import Daisy
+from repro.core.operators import Query, query_fingerprint
+from repro.service.cache import ResultCache
+from repro.service.metrics import ServiceMetrics
+from repro.service.scheduler import Ticket, batch_tickets
+from repro.service.session import LineageEntry, Session, SessionLimitError
+
+
+class QueryServer:
+    def __init__(
+        self,
+        daisy: Daisy,
+        cache: Optional[ResultCache] = None,
+        metrics: Optional[ServiceMetrics] = None,
+        max_batch: int = 8,
+    ):
+        self.daisy = daisy
+        self.cache = cache if cache is not None else ResultCache()
+        self.metrics = metrics if metrics is not None else ServiceMetrics()
+        self.max_batch = max_batch
+        self.sessions: Dict[str, Session] = {}
+        self._pending: Deque[Ticket] = deque()
+        self._lock = threading.Lock()
+        self._work = threading.Condition(self._lock)
+        self._seq = 0
+        self._stopping = False
+
+    # ------------------------------------------------------------- sessions
+    def open_session(self, sid: Optional[str] = None, **limits) -> Session:
+        session = Session(sid, **limits)
+        with self._lock:
+            self.sessions[session.sid] = session
+        return session
+
+    # ------------------------------------------------------------ admission
+    def submit(self, session: Session, query: Query) -> Ticket:
+        """Queue a query; thread-safe; raises ``SessionLimitError`` on quota."""
+        try:
+            session.admit()
+        except SessionLimitError:
+            with self._lock:
+                self.metrics.rejected += 1
+            raise
+        with self._work:
+            if self._stopping:
+                session.fail()
+                raise RuntimeError("server is stopping; submission refused")
+            ticket = Ticket(
+                seq=self._seq,
+                session=session,
+                query=query,
+                fingerprint=query_fingerprint(query),
+            )
+            self._seq += 1
+            self._pending.append(ticket)
+            self._work.notify()
+        return ticket
+
+    def query(self, session: Session, query: Query, timeout: Optional[float] = None):
+        """Submit and block until answered (requires a running serving
+        thread; synchronous callers use ``submit`` + ``drain`` instead)."""
+        return self.submit(session, query).wait(timeout)
+
+    # ------------------------------------------------------------- step loop
+    def step(self) -> int:
+        """Admit up to ``max_batch`` pending tickets and serve them grouped
+        by cluster.  Returns the number of tickets served."""
+        with self._lock:
+            batch: List[Ticket] = []
+            while self._pending and len(batch) < self.max_batch:
+                batch.append(self._pending.popleft())
+        if not batch:
+            return 0
+        executed_this_step: set = set()
+        for group in batch_tickets(batch, self.daisy.rules):
+            for ticket in group:
+                self._serve(ticket, executed_this_step)
+        self.metrics.steps += 1
+        return len(batch)
+
+    def _serve(self, ticket: Ticket, executed_this_step: set) -> None:
+        daisy = self.daisy
+        d0, r0 = daisy.detect_calls, daisy.repair_calls
+        result = self.cache.get(ticket.fingerprint, daisy.clean_version)
+        if result is not None:
+            ticket.cached = True
+            self.metrics.observe_hit(same_step=ticket.fingerprint in executed_this_step)
+        else:
+            try:
+                result = daisy.execute(ticket.query)
+            except Exception as exc:  # surface to the caller, keep serving
+                self.metrics.errors += 1
+                # partial cleaning work before the failure still happened
+                self.metrics.observe_work(
+                    daisy.detect_calls - d0, daisy.repair_calls - r0
+                )
+                ticket.error = exc
+                ticket.session.fail()
+                ticket.event.set()
+                return
+            self.cache.put(ticket.fingerprint, daisy.clean_version, result)
+            executed_this_step.add(ticket.fingerprint)
+            self.metrics.observe_execution(result.report)
+        self.metrics.observe_work(daisy.detect_calls - d0, daisy.repair_calls - r0)
+        ticket.result = result
+        ticket.clean_version = daisy.clean_version
+        ticket.session.complete(
+            LineageEntry(
+                fingerprint=ticket.fingerprint,
+                clean_version=daisy.clean_version,
+                result_size=result.report.result_size,
+                cached=ticket.cached,
+            )
+        )
+        ticket.event.set()
+
+    # ------------------------------------------------------------ lifecycle
+    def drain(self) -> int:
+        """Serve everything pending synchronously (no serving thread needed).
+        Returns the number of tickets served."""
+        total = 0
+        while True:
+            served = self.step()
+            if served == 0:
+                return total
+            total += served
+
+    def run(self, max_steps: int = 1_000_000, idle_wait: float = 0.05) -> None:
+        """Serving-thread loop: step while work arrives; exit once ``stop()``
+        was called and the queue drained.  ``max_steps`` is a runaway
+        backstop and counts only steps that served work — idling forever is
+        fine."""
+        served_steps = 0
+        while served_steps < max_steps:
+            if self.step():
+                served_steps += 1
+                continue
+            with self._work:
+                if self._stopping and not self._pending:
+                    return
+                self._work.wait(timeout=idle_wait)
+
+    def stop(self) -> None:
+        with self._work:
+            self._stopping = True
+            self._work.notify_all()
+
+    def snapshot(self) -> Dict[str, object]:
+        snap = self.metrics.snapshot()
+        snap["cache"] = self.cache.stats()
+        snap["clean_version"] = self.daisy.clean_version
+        with self._lock:  # open_session inserts concurrently
+            sessions = list(self.sessions.values())
+        snap["sessions"] = [s.snapshot() for s in sessions]
+        return snap

@@ -1,0 +1,98 @@
+"""Per-user serving sessions (DESIGN.md §9): identity, lineage, limits.
+
+A ``Session`` is the unit of admission control and provenance.  Lineage
+records, per answered query, the fingerprint, the clean-state version the
+answer was computed at, and whether it came from the cache — enough to
+re-derive *which* probabilistic instance a user's past answer reflects
+(the gradually-cleaned database changes under them by design, §6).
+
+Limits are enforced at submit time: ``max_inflight`` bounds a session's
+concurrently queued tickets (back-pressure per user), ``max_queries``
+bounds its lifetime total (quota).  Violations raise ``SessionLimitError``
+— the server surfaces them to the caller without touching the shared
+executor.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import threading
+from typing import Dict, List, Optional
+
+
+class SessionLimitError(RuntimeError):
+    """A submit exceeded the session's inflight or lifetime quota."""
+
+
+@dataclasses.dataclass(frozen=True)
+class LineageEntry:
+    fingerprint: str
+    clean_version: int
+    result_size: int
+    cached: bool
+
+
+_SIDS = itertools.count()
+
+
+class Session:
+    def __init__(
+        self,
+        sid: Optional[str] = None,
+        max_inflight: int = 64,
+        max_queries: Optional[int] = None,
+        max_lineage: int = 256,
+    ):
+        self.sid = sid if sid is not None else f"s{next(_SIDS)}"
+        self.max_inflight = max_inflight
+        self.max_queries = max_queries
+        self.max_lineage = max_lineage
+        self.submitted = 0
+        self.inflight = 0
+        self.answered = 0
+        self.failed = 0
+        self.lineage: List[LineageEntry] = []
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------ admission
+    def admit(self) -> None:
+        """Claim one submission slot or raise ``SessionLimitError``."""
+        with self._lock:
+            if self.max_queries is not None and self.submitted >= self.max_queries:
+                raise SessionLimitError(
+                    f"session {self.sid}: lifetime quota {self.max_queries} reached"
+                )
+            if self.inflight >= self.max_inflight:
+                raise SessionLimitError(
+                    f"session {self.sid}: {self.inflight} tickets already in flight"
+                )
+            self.submitted += 1
+            self.inflight += 1
+
+    def complete(self, entry: LineageEntry) -> None:
+        with self._lock:
+            self.inflight -= 1
+            self.answered += 1
+            self.lineage.append(entry)
+            del self.lineage[: -self.max_lineage]
+
+    def fail(self) -> None:
+        with self._lock:
+            self.inflight -= 1
+            self.failed += 1
+
+    # ------------------------------------------------------------- reporting
+    def snapshot(self) -> Dict[str, object]:
+        with self._lock:
+            return {
+                "sid": self.sid,
+                "submitted": self.submitted,
+                "inflight": self.inflight,
+                "answered": self.answered,
+                "failed": self.failed,
+                "cached_answers": sum(e.cached for e in self.lineage),
+                "last_clean_version": (
+                    self.lineage[-1].clean_version if self.lineage else None
+                ),
+            }
