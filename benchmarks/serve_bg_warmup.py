@@ -1,0 +1,206 @@
+"""Background-cleaning warmup — progressive exploratory workload with and
+without the BackgroundCleaner (DESIGN.md §10).
+
+The workload models an exploratory analysis session discovering new views
+over time: cycle ``c`` revisits every view opened so far and opens
+``step`` new ones.  Under PR 3's service, every newly opened view pays
+its first-touch detect/repair on the interactive path; with the
+background cleaner draining cold scopes in the idle window between
+cycles, the scope is already warm when the view is first queried and the
+cleaning steps skip.
+
+The dataset is built cluster-DISJOINT (every zip group's city values are
+unique to the group), so relaxation closures never bridge groups and
+every answer is a pure function of its own group's cleaning state —
+which makes the bit-identity gate exact for EVERY answer, not just at
+steady state, regardless of how background increments interleave with
+foreground queries (the §10 soundness argument, testable form).
+
+Acceptance gates (ISSUE 4, enforced here and smoked in CI):
+
+* every answer bit-identical (canonical signatures, reusing
+  ``serve_throughput.signature``) across service, service+bg, and the
+  serial fresh-Daisy on-demand reference;
+* the service+bg variant reaches steady state in STRICTLY fewer
+  foreground detect calls than the plain service (PR 3) on the same
+  workload — with the saved work showing up in the background
+  attribution instead;
+* both variants reach a final cycle that pays zero foreground detect
+  work, and service+bg serves it entirely from the cache.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import write_csv
+from benchmarks.serve_throughput import signature
+from repro.core.constraints import FD
+from repro.core.executor import Daisy, DaisyConfig
+from repro.core.operators import Pred, Query
+from repro.core.relation import make_relation
+from repro.service import BackgroundCleaner, QueryServer, ResultCache
+
+RULES = {"h": [FD("zc", "zip", "city")]}
+
+
+def build_db(n: int, groups: int, error_frac: float = 0.3, seed: int = 11):
+    """Cluster-disjoint FD dataset: city values live in [g*8, (g+1)*8) for
+    zip group g, so no value bridges groups.  Every group deterministically
+    gets >= 1 error row (row 0) and >= 1 clean row (row 1): every view's
+    first touch really pays detect work, and relaxation closures always
+    reach the whole group."""
+    rng = np.random.default_rng(seed)
+    per = n // groups
+    zipc = np.repeat(np.arange(groups, dtype=np.int32), per)
+    n = per * groups
+    city = (zipc * 8).astype(np.int32)
+    edit = rng.random(n) < error_frac
+    edit[0::per] = True  # row 0 of each group: guaranteed dirty
+    edit[1::per] = False  # row 1 of each group: guaranteed clean
+    city[edit] = (zipc[edit] * 8 + rng.integers(1, 8, int(edit.sum()))).astype(
+        np.int32
+    )
+    return {
+        "h": make_relation(
+            {"zip": zipc, "city": city}, overlay=["zip", "city"], k=8, rules=["zc"]
+        )
+    }
+
+
+def workload(groups: int, v0: int, step: int, cycles: int):
+    """Per-cycle query lists: cycle c revisits all views opened so far and
+    opens ``step`` new ones (capped at ``groups``).  A view g's query
+    selects the group's majority city value — its answer depends on the
+    group's repair candidates, so bit-identity is a real check."""
+    views = [Query("h", preds=(Pred("city", "==", g * 8),)) for g in range(groups)]
+    return [views[: min(v0 + c * step, groups)] for c in range(cycles)]
+
+
+def run_serial(db, cfg, cycle_queries):
+    """On-demand reference: a fresh Daisy executes the same query stream
+    serially (the PR 3 bit-identity baseline)."""
+    daisy = Daisy(db, RULES, cfg)
+    sigs = []
+    for queries in cycle_queries:
+        sigs.extend(signature(daisy.execute(q)) for q in queries)
+    return sigs
+
+
+def run_service(db, cfg, cycle_queries, idle_increments: int, increment_rows: int,
+                background: bool):
+    """Serve the workload cycle by cycle; with ``background`` the cleaner
+    drains up to ``idle_increments`` cold-scope increments in the idle
+    window after each cycle (the deterministic, cooperative form of the
+    idle-budget tuning knob — the threaded form is ``BackgroundCleaner.start``)."""
+    daisy = Daisy(db, RULES, cfg)
+    server = QueryServer(daisy, cache=ResultCache(capacity=512), max_batch=8)
+    cleaner = (
+        BackgroundCleaner(daisy, server=server, increment_rows=increment_rows)
+        if background
+        else None
+    )
+    sessions = [server.open_session(f"user{i}") for i in range(4)]
+    sigs, per_cycle = [], []
+    for c, queries in enumerate(cycle_queries):
+        d0 = server.metrics.detect_calls
+        h0 = server.metrics.cache_hits
+        tickets = [
+            server.submit(sessions[i % len(sessions)], q)
+            for i, q in enumerate(queries)
+        ]
+        server.drain()
+        sigs.extend(signature(t.result) for t in tickets)
+        per_cycle.append(
+            {
+                "cycle": c,
+                "views": len(queries),
+                "fg_detect": server.metrics.detect_calls - d0,
+                "hits": server.metrics.cache_hits - h0,
+            }
+        )
+        if cleaner is not None:
+            cleaner.drain(max_increments=idle_increments)
+    return sigs, server, per_cycle
+
+
+def run(quick: bool = False):
+    n = 480 if quick else 3840
+    groups = 24 if quick else 64
+    v0, step = (4, 4) if quick else (8, 8)
+    cycles = 8 if quick else 10
+    idle_increments = 6 if quick else 10
+    increment_rows = (n // groups) * (step + 1)
+    cfg = DaisyConfig(use_cost_model=False)
+    cycle_queries = workload(groups, v0, step, cycles)
+    n_queries = sum(len(qs) for qs in cycle_queries)
+
+    t0 = time.perf_counter()
+    sigs_serial = run_serial(build_db(n, groups), cfg, cycle_queries)
+    dt_serial = time.perf_counter() - t0
+
+    rows, results = [], {}
+    for variant, background in (("service", False), ("service+bg", True)):
+        t0 = time.perf_counter()
+        sigs, server, per_cycle = run_service(
+            build_db(n, groups), cfg, cycle_queries,
+            idle_increments, increment_rows, background,
+        )
+        dt = time.perf_counter() - t0
+        snap = server.snapshot()
+        results[variant] = (sigs, snap, per_cycle)
+        for pc in per_cycle:
+            rows.append(
+                [variant, pc["cycle"], pc["views"], pc["fg_detect"], pc["hits"],
+                 snap["background"]["increments"], round(dt, 3)]
+            )
+        print(
+            f"serve_bg_warmup {variant}: {n_queries} queries in {dt:.2f}s — "
+            f"fg detect {snap['detect_calls']}, bg detect "
+            f"{snap['background']['detect_calls']} "
+            f"({snap['background']['increments']} increments), "
+            f"hit rate {snap['hit_rate']:.0%}"
+        )
+
+    sigs_svc, snap_svc, cyc_svc = results["service"]
+    sigs_bg, snap_bg, cyc_bg = results["service+bg"]
+
+    # gate 1: every answer bit-identical across all three runs
+    assert sigs_svc == sigs_serial, "service answers differ from serial reference"
+    assert sigs_bg == sigs_serial, "service+bg answers differ from serial reference"
+
+    # gate 2: background warmup strictly reduces foreground detect work,
+    # and the difference is real background work, not skipped cleaning
+    fg_svc = snap_svc["detect_calls"]
+    fg_bg = snap_bg["detect_calls"]
+    assert fg_bg < fg_svc, (
+        f"background cleaning did not reduce foreground detects "
+        f"({fg_bg} vs {fg_svc})"
+    )
+    assert snap_bg["background"]["detect_calls"] > 0, "cleaner did no detect work"
+
+    # gate 3: both reach a zero-foreground-detect steady state; with the
+    # cleaner warm and no more version bumps, the last cycle is all hits
+    assert cyc_svc[-1]["fg_detect"] == 0 and cyc_bg[-1]["fg_detect"] == 0
+    assert cyc_bg[-1]["hits"] == cyc_bg[-1]["views"], (
+        "service+bg last cycle not fully cache-served"
+    )
+
+    print(
+        f"serve_bg_warmup: answers bit-identical; foreground detects "
+        f"{fg_svc} -> {fg_bg} "
+        f"({snap_bg['background']['detect_calls']} absorbed in background); "
+        f"serial reference {dt_serial:.2f}s"
+    )
+    return write_csv(
+        "serve_bg_warmup",
+        ["variant", "cycle", "views", "fg_detect", "cache_hits",
+         "bg_increments_total", "seconds_total"],
+        rows,
+    )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,10 +1,13 @@
 """Quickstart: serve concurrent analytical queries over one gradually-
-cleaned instance (the repro.service subsystem, DESIGN.md §9).
+cleaned instance (the repro.service subsystem, DESIGN.md §9/§10).
 
 Three analysts share a dirty Cities table.  Their queries drive the
 cleaning (the paper's on-demand model); the service batches overlapping
 queries so one detect/repair pass pays for everyone, and the clean-state-
-aware cache answers repeats without touching the executor.
+aware cache answers repeats without touching the executor.  Between
+bursts, the background cleaner warms whatever is still cold so the next
+first-touch query pays no detect latency (cooperative form — see the
+README "Operating the service" section for the threaded form).
 
 Run:  PYTHONPATH=src python examples/serve_queries.py
 """
@@ -15,15 +18,15 @@ from repro.core.constraints import FD
 from repro.core.executor import Daisy, DaisyConfig
 from repro.core.operators import Pred, Query
 from repro.core.relation import Dictionary, make_relation
-from repro.service import QueryServer
+from repro.service import BackgroundCleaner, QueryServer
 
-city = Dictionary(["Los Angeles", "San Francisco", "New York"])
+city = Dictionary(["Los Angeles", "San Francisco", "New York", "Boston"])
 rel = make_relation(
     {
         "zip": np.array([9001, 9001, 9001, 10001, 10001]),
         "city": city.encode_many(
             ["Los Angeles", "San Francisco", "Los Angeles",
-             "San Francisco", "New York"]
+             "New York", "Boston"]
         ),
     },
     overlay=["zip", "city"],
@@ -39,13 +42,13 @@ daisy = Daisy(
 server = QueryServer(daisy)
 analysts = [server.open_session(name) for name in ("ana", "ben", "cho")]
 
-# everyone explores the same neighborhoods — overlapping σ, repeated queries
+# everyone explores the same neighborhood — overlapping σ, repeated queries
+# (nobody touches the 10001 cluster yet: it stays cold)
 la = Query("cities", preds=(Pred("city", "==", city.encode("Los Angeles")),))
 ny_zip = Query("cities", preds=(Pred("zip", "==", 10001),))
 tickets = []
 for analyst in analysts:
     tickets.append(server.submit(analyst, la))
-    tickets.append(server.submit(analyst, ny_zip))
 for analyst in analysts:
     tickets.append(server.submit(analyst, la))  # repeat -> cache
 
@@ -62,3 +65,16 @@ print(f"queries={snap['queries']} executions={snap['executions']} "
       f"(amortized {snap['detect_repair_per_query']}/query)")
 print("per-session lineage:", [s["cached_answers"] for s in snap["sessions"]],
       "answers from cache")
+
+# idle window: the background cleaner warms the zip=10001 cluster nobody
+# queried, so its first-touch query skips the cleaning steps entirely
+cleaner = BackgroundCleaner(daisy, server=server, increment_rows=8)
+increments = cleaner.drain()
+d0 = server.metrics.detect_calls
+t = server.submit(analysts[0], ny_zip)
+server.drain()
+bg = server.snapshot()["background"]
+print(f"background: {increments} increments ({bg['detect_calls']} detects), "
+      f"then first-touch zip=10001 served with "
+      f"{server.metrics.detect_calls - d0} foreground detects "
+      f"(rows {np.flatnonzero(np.asarray(t.result.mask)).tolist()})")

@@ -6,6 +6,20 @@ data cleaning incrementally, and then, by evaluating the total cost after
 each query, switches strategy and applies the cleaning task over the rest of
 the dataset").
 
+Two extensions beyond the paper's formulas live here as well (DESIGN.md §10):
+
+* **Sharded detection pricing.**  When the executor detects over the
+  key-routed shuffle (DESIGN.md §8) it feeds the observed
+  ``ShardedDetectInfo`` — per-shard row counts and the retry history —
+  back through ``observe_detect_cost``, so the full/partial decision
+  prices the *sharded* comparison space (``Σ rows_s²`` plus the shuffle
+  passes) instead of the dense ``n²/partitions`` estimate.
+* **Background scope priorities.**  ``ScopePriority`` /
+  ``prioritize_scopes`` rank the cold (unchecked-and-dirty) rule scopes a
+  background cleaner should full-clean first: expected detect pair-count
+  a first-touch foreground query would pay, times the touch probability
+  observed in session lineage.
+
 Per-query incremental cost (formula (1)):
 
     (n - sum_{j<i} q_j)                relaxation over the unknown tuples
@@ -25,7 +39,70 @@ paper (both sides run on the same executor so constants cancel).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Iterable, List, Optional
+
+
+def sharded_detect_cost(info, n_rows: Optional[int] = None) -> float:
+    """Price a full-scope sharded detect from an observed routing.
+
+    ``info`` is duck-typed as ``repro.dist.detect.ShardedDetectInfo``
+    (``n_shards``, ``per_shard_rows``, ``routed_rows``, ``retries``,
+    ``sharded_pairs``) — this module stays importable without the dist
+    layer.  The estimate is the uniform per-shard pair count at ``n_rows``
+    scaled by the observed skew (actual routed pairs over the uniform pair
+    count of the observed routing), plus one shuffle pass over the rows per
+    attempt the retry history says the routing needed.
+    """
+    n = int(n_rows if n_rows is not None else info.routed_rows)
+    shards = max(int(info.n_shards), 1)
+    per = -(-n // shards)
+    uniform = float(shards * per * per)
+    if info.routed_rows:
+        obs_per = -(-int(info.routed_rows) // shards)
+        obs_uniform = float(shards * obs_per * obs_per) or 1.0
+        skew = max(float(info.sharded_pairs) / obs_uniform, 1.0)
+    else:
+        skew = 1.0
+    return uniform * skew + (int(info.retries) + 1) * n
+
+
+@dataclasses.dataclass(frozen=True)
+class ScopePriority:
+    """One cold (table, rule) scope ranked for background cleaning
+    (DESIGN.md §10).
+
+    ``expected_pairs`` is the detect comparison-space a first-touch
+    foreground query would pay on this scope right now — the rule's
+    effective full-detect cost (dense, or sharded once the executor has
+    observed a routing) scaled by the cold fraction.  ``touch_probability``
+    is the Laplace-smoothed share of recently answered queries whose
+    dependency set included this scope (from session lineage), i.e. how
+    likely the next query is to pay that first touch.
+    """
+
+    table: str
+    rule: str
+    cold_rows: int  # unchecked rows a foreground detect would still scan
+    expected_pairs: float
+    touch_probability: float
+
+    @property
+    def priority(self) -> float:
+        """Expected foreground work saved by cleaning this scope now."""
+        return self.expected_pairs * self.touch_probability
+
+
+def prioritize_scopes(scopes: Iterable[ScopePriority]) -> List[ScopePriority]:
+    """Sort cold scopes by descending expected saved work; drop warm ones.
+
+    Ties break on (table, rule) so the background cleaner's pick is
+    deterministic under equal priorities (the seeded interleaving tests
+    rely on that).
+    """
+    return sorted(
+        (s for s in scopes if s.cold_rows > 0),
+        key=lambda s: (-s.priority, s.table, s.rule),
+    )
 
 
 @dataclasses.dataclass
@@ -47,10 +124,27 @@ class CostModel:
     expected_queries: int = 50  # workload length estimate (paper: known q)
     history: List[QueryCost] = dataclasses.field(default_factory=list)
     switched: bool = False
+    # observed full-detect cost on the sharded path (DESIGN.md §8/§10):
+    # None until the executor has seen a ShardedDetectInfo for this rule
+    df_observed: Optional[float] = None
 
     # -------------------------------------------------------------- records
     def record(self, q_i: int, e_i: int, d_i: float, eps_i: int) -> None:
         self.history.append(QueryCost(q_i, e_i, d_i, eps_i))
+
+    def observe_detect_cost(self, cost: float) -> None:
+        """Record an observed full-detect cost (e.g. ``sharded_detect_cost``
+        of a routing the executor actually ran), so the full/partial decision
+        prices the execution path detection will really take."""
+        self.df_observed = cost if self.df_observed is None else min(
+            self.df_observed, cost
+        )
+
+    @property
+    def df_effective(self) -> float:
+        """Full-detect cost the decision should use: the static estimate,
+        improved by the cheapest observed (sharded) detect if any."""
+        return self.df if self.df_observed is None else min(self.df, self.df_observed)
 
     @property
     def seen_rows(self) -> int:
@@ -130,7 +224,7 @@ class CostModel:
         q = self.expected_queries
         return (
             q * self.n
-            + self.df
+            + self.df_effective
             + self.epsilon * self.n
             + self.n
             + self.epsilon * self.p
@@ -142,7 +236,11 @@ class CostModel:
         unseen = max(self.n - self.seen_rows, 0)
         eps_left = max(self.epsilon - self.repaired_errors, 0)
         frac = unseen / max(self.n, 1)
-        return frac * self.df + eps_left * unseen / max(self.n, 1) * self.p + unseen
+        return (
+            frac * self.df_effective
+            + eps_left * unseen / max(self.n, 1) * self.p
+            + unseen
+        )
 
     # -------------------------------------------------------------- decision
     def should_switch_to_full(self) -> bool:

@@ -150,6 +150,29 @@ def will_shard(rule, mesh, n_shards: int | None = None) -> bool:
     return default_n_shards(mesh) >= 2
 
 
+def detect_dc_auto_info(
+    rel: Relation,
+    dc: DC,
+    row_scope: jnp.ndarray,
+    col_scope: jnp.ndarray,
+    block: int = 256,
+    mesh=None,
+    n_shards: int | None = None,
+):
+    """``detect_dc`` with sharded dispatch, returning ``(result, info)``
+    where ``info`` is the ``ShardedDetectInfo`` of the routing (per-shard
+    row counts, retry history) when the sharded path ran, else ``None`` —
+    the executor feeds it to the cost model so the full/partial decision
+    prices the shuffle path (DESIGN.md §10)."""
+    if will_shard(dc, mesh, n_shards):
+        from repro.dist.detect import detect_dc_sharded_info
+
+        return detect_dc_sharded_info(
+            rel, dc, row_scope, col_scope, mesh, n_shards=n_shards, block=block
+        )
+    return detect_dc(rel, dc, row_scope, col_scope, block=block), None
+
+
 def detect_dc_auto(
     rel: Relation,
     dc: DC,
@@ -163,13 +186,27 @@ def detect_dc_auto(
     carries a same-attribute equality atom, route rows by the equality key
     and scan per shard (bit-identical results); otherwise the dense scan.
     """
-    if will_shard(dc, mesh, n_shards):
-        from repro.dist.detect import detect_dc_sharded
+    det, _ = detect_dc_auto_info(
+        rel, dc, row_scope, col_scope, block=block, mesh=mesh, n_shards=n_shards
+    )
+    return det
 
-        return detect_dc_sharded(
-            rel, dc, row_scope, col_scope, mesh, n_shards=n_shards, block=block
-        )
-    return detect_dc(rel, dc, row_scope, col_scope, block=block)
+
+def detect_fd_auto_info(
+    rel: Relation,
+    fd: FD,
+    scope: jnp.ndarray,
+    k: int | None = None,
+    mesh=None,
+    n_shards: int | None = None,
+):
+    """``detect_fd`` with sharded dispatch, returning ``(result, info)``
+    (``info`` as in ``detect_dc_auto_info``)."""
+    if will_shard(fd, mesh, n_shards):
+        from repro.dist.detect import detect_fd_sharded_info
+
+        return detect_fd_sharded_info(rel, fd, scope, mesh, k=k, n_shards=n_shards)
+    return detect_fd(rel, fd, scope, k=k), None
 
 
 def detect_fd_auto(
@@ -181,8 +218,5 @@ def detect_fd_auto(
     n_shards: int | None = None,
 ) -> FDDetectResult:
     """``detect_fd`` with sharded dispatch (FDs always key on the lhs)."""
-    if will_shard(fd, mesh, n_shards):
-        from repro.dist.detect import detect_fd_sharded
-
-        return detect_fd_sharded(rel, fd, scope, mesh, k=k, n_shards=n_shards)
-    return detect_fd(rel, fd, scope, k=k)
+    det, _ = detect_fd_auto_info(rel, fd, scope, k=k, mesh=mesh, n_shards=n_shards)
+    return det

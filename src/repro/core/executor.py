@@ -31,8 +31,8 @@ import numpy as np
 
 from repro.core import stats as statsmod
 from repro.core.constraints import DC, FD
-from repro.core.cost import CostModel
-from repro.core.detect import detect_dc_auto, detect_fd, detect_fd_auto, will_shard
+from repro.core.cost import CostModel, sharded_detect_cost
+from repro.core.detect import detect_dc_auto_info, detect_fd, detect_fd_auto_info
 from repro.core.operators import (
     GroupBySpec,
     JoinState,
@@ -45,7 +45,13 @@ from repro.core.operators import (
     prob_equijoin,
     _finalize_groupby,
 )
-from repro.core.planner import CleanStep, PlanInfo, plan_query
+from repro.core.planner import (
+    CleanStep,
+    PlanInfo,
+    full_clean_step,
+    plan_query,
+    probe_step,
+)
 from repro.core.relax import relax_fd
 from repro.core.relation import CAND_VALUE, Relation
 from repro.core.repair import dc_repair_candidates, fd_repair_candidates
@@ -128,13 +134,20 @@ class Daisy:
         self.stats: Dict[Tuple[str, str], object] = {}
         self.cost: Dict[Tuple[str, str], CostModel] = {}
         self.checked_partitions: Dict[Tuple[str, str], int] = {}
-        # serving hooks (DESIGN.md §9): a monotone version counter bumped on
-        # every candidate-merge / checked-bit commit (the service cache's
-        # invalidation signal), cumulative detect/repair invocation counters
-        # (the work the cache amortizes), and a re-entrancy lock so concurrent
-        # sessions can share one executor without torn read-modify-writes of
-        # ``self.db``.
+        # serving hooks (DESIGN.md §9/§10): a monotone version counter bumped
+        # on every candidate-merge / checked-bit commit (the service cache's
+        # invalidation signal) plus a per-(table, rule) scope version so the
+        # cache can invalidate exactly the queries a commit can affect,
+        # cumulative detect/repair invocation counters (the work the cache
+        # amortizes), the last observed sharded routing per rule (feeds the
+        # cost model and the background priority model), and a re-entrancy
+        # lock so concurrent sessions can share one executor without torn
+        # read-modify-writes of ``self.db``.
         self._clean_version = 0
+        self._scope_versions: Dict[Tuple[str, str], int] = {
+            (t, r.name): 0 for t, rs in self.rules.items() for r in rs
+        }
+        self.sharded_info: Dict[Tuple[str, str], object] = {}
         self.detect_calls = 0
         self.repair_calls = 0
         self._lock = threading.RLock()
@@ -149,16 +162,42 @@ class Daisy:
         contract, asserted in tests/test_service.py)."""
         return self._clean_version
 
-    def _apply(self, rel: Relation, deltas) -> Relation:
-        """``apply_candidates`` + version bump (every overlay merge advances
-        the probabilistic instance)."""
+    @property
+    def lock(self) -> threading.RLock:
+        """The executor's re-entrancy lock.  Callers that must read versioned
+        state and act on it atomically with respect to a concurrent cleaner —
+        the service layer's cache-lookup-or-execute, the background cleaner's
+        increments — take this lock; ``execute`` re-acquires it re-entrantly."""
+        return self._lock
+
+    def scope_version(self, table: str, rule_name: str) -> int:
+        """Monotone per-(table, rule) version: bumped exactly when a commit
+        for THAT rule advances the instance.  Equal scope versions over a
+        query's overlapping rules imply a bit-identical answer (DESIGN.md
+        §10) — the refinement the service cache keys on so background
+        cleaning of one rule never invalidates another rule's entries."""
+        return self._scope_versions.get((table, rule_name), 0)
+
+    def scope_versions(self, deps: Sequence[Tuple[str, str]]) -> Tuple[int, ...]:
+        """Version vector over a dependency list of (table, rule) pairs (the
+        service cache's key half; read under ``lock`` when a background
+        cleaner may be committing concurrently)."""
+        return tuple(self._scope_versions.get(d, 0) for d in deps)
+
+    def _apply(self, rel: Relation, deltas, table: str, rule_name: str) -> Relation:
+        """``apply_candidates`` + version bumps (every overlay merge advances
+        the probabilistic instance globally and for the committing rule)."""
         self._clean_version += 1
+        key = (table, rule_name)
+        self._scope_versions[key] = self._scope_versions.get(key, 0) + 1
         return apply_candidates(rel, deltas)
 
-    def _mark(self, rel: Relation, rule_name: str, scope) -> Relation:
-        """``mark_checked`` + version bump (checked bits steer future cleaning,
-        so they are part of the versioned state)."""
+    def _mark(self, rel: Relation, table: str, rule_name: str, scope) -> Relation:
+        """``mark_checked`` + version bumps (checked bits steer future
+        cleaning, so they are part of the versioned state)."""
         self._clean_version += 1
+        key = (table, rule_name)
+        self._scope_versions[key] = self._scope_versions.get(key, 0) + 1
         return mark_checked(rel, rule_name, scope)
 
     # ------------------------------------------------------------ statistics
@@ -205,10 +244,107 @@ class Daisy:
         planner marked the rule shardable, else None (dense scan)."""
         return self.config.mesh if step.shardable else None
 
+    # ------------------------------------------------- background increments
+    def _rule_named(self, table: str, rule_name: str):
+        for rule in self.rules.get(table, ()):
+            if rule.name == rule_name:
+                return rule
+        raise KeyError(f"no rule {rule_name!r} on table {table!r}")
+
+    def cold_rows(self, table: str, rule_name: str) -> jnp.ndarray:
+        """Rows a first-touch foreground query would still pay detect work
+        for: unchecked rows, intersected for FDs with the statically-known
+        dirty groups (clean groups skip via the Fig. 11 dirty-group gate
+        without ever being marked, so they are not background work either).
+        Read under ``lock`` if a cleaner may be committing concurrently."""
+        rule = self._rule_named(table, rule_name)
+        rel = self.db[table]
+        cold = unchecked(rel, rule_name)
+        st = self.stats.get((table, rule_name))
+        if isinstance(rule, FD) and st is not None:
+            cold = cold & jnp.asarray(st.dirty_row)
+        return cold
+
+    def cold_count(self, table: str, rule_name: str) -> int:
+        """Host count of ``cold_rows`` (the background priority model's
+        cold-fraction input)."""
+        return int(np.asarray(jnp.sum(self.cold_rows(table, rule_name))))
+
+    def _fd_increment_seed(
+        self, rel: Relation, fd: FD, cold: jnp.ndarray, max_rows: Optional[int]
+    ) -> jnp.ndarray:
+        """Whole-lhs-group seed mask for one background FD increment: the
+        first (ascending group id) cold groups whose valid rows total at
+        least ``max_rows`` (always >= 1 group).  Groups are taken whole —
+        candidates are per-group evidence, so a split group would merge
+        different candidate sets than the foreground path (DESIGN.md §10)."""
+        valid = np.asarray(rel.valid)
+        cold_np = np.asarray(cold)
+        gid = np.zeros(valid.shape[0], dtype=np.int64)
+        for attr in fd.lhs:
+            _, inv = np.unique(np.asarray(rel.columns[attr]), return_inverse=True)
+            gid = gid * (int(inv.max()) + 1) + inv
+        # densify the combined key so per-group sizes are one bincount pass
+        _, gid = np.unique(gid, return_inverse=True)
+        cold_groups = np.unique(gid[cold_np])
+        if max_rows is not None:
+            sizes = np.bincount(gid[valid], minlength=int(gid.max()) + 1)
+            cum = np.cumsum(sizes[cold_groups])
+            # smallest prefix of cold groups reaching max_rows (>= 1 group)
+            cut = int(np.searchsorted(cum, max_rows)) + 1
+            cold_groups = cold_groups[:cut]
+        return jnp.asarray(valid & np.isin(gid, cold_groups))
+
+    def clean_scope_increment(
+        self, table: str, rule_name: str, max_rows: Optional[int] = None
+    ) -> Optional[StepReport]:
+        """One preemptible background-cleaning increment for a rule scope
+        (DESIGN.md §10); returns its ``StepReport`` or ``None`` when the
+        scope is already warm.
+
+        Runs under ``lock`` and commits through the same ``_apply``/``_mark``
+        path as foreground steps, so every increment bumps the global and
+        per-scope versions exactly like a query would.  FDs clean up to
+        ``max_rows`` cold rows per call, seeded on whole lhs groups and run
+        through the foreground incremental pipeline (relax closure, detect,
+        repair, mark) — by Lemma 4 the accumulated state is the one the same
+        sweeps issued as queries would reach.  DCs run the full-clean step
+        in one increment (the pairwise matrix has no cheaper sound cut), so
+        a DC increment's preemption latency is one full DC pass.
+        Cost-model histories are not polluted (``record_cost=False``)."""
+        with self._lock:
+            rule = self._rule_named(table, rule_name)
+            rel = self.db[table]
+            cold = self.cold_rows(table, rule_name)
+            if not bool(np.asarray(jnp.any(cold))):
+                return None
+            report = ExecReport()
+            if isinstance(rule, FD):
+                seed = self._fd_increment_seed(rel, rule, cold, max_rows)
+                self._clean_fd(
+                    probe_step(table, rule), report,
+                    answer_override=seed, record_cost=False,
+                )
+            else:
+                self._clean_dc(
+                    full_clean_step(table, rule), report, record_cost=False
+                )
+            return report.steps[0] if report.steps else None
+
     # ------------------------------------------------------------- FD steps
     def _clean_fd(
-        self, step: CleanStep, report: ExecReport
+        self,
+        step: CleanStep,
+        report: ExecReport,
+        answer_override: Optional[jnp.ndarray] = None,
+        record_cost: bool = True,
     ) -> None:
+        """One FD cleaning step.  ``answer_override`` substitutes an explicit
+        answer mask for the predicate filter (the background cleaner's
+        cold-group sweeps, DESIGN.md §10 — the step then runs exactly the
+        relax/detect/repair/mark pipeline a query selecting those rows
+        would); ``record_cost=False`` keeps background work out of the
+        per-query cost-model history."""
         table, fd = step.table, step.rule
         rel = self.db[table]
         cm = self.cost.get((table, fd.name))
@@ -219,7 +355,11 @@ class Daisy:
             scope = rel.valid
             rep.answer_size = int(np.asarray(jnp.sum(scope)))
         else:
-            answer = filter_mask(rel, step.preds)
+            answer = (
+                answer_override
+                if answer_override is not None
+                else filter_mask(rel, step.preds)
+            )
             rep.answer_size = int(np.asarray(jnp.sum(answer)))
             # Fig. 11 skip: answer touches no dirty group and nothing unchecked
             if st is not None:
@@ -231,7 +371,7 @@ class Daisy:
                 if not dirty_hit:
                     rep.mode = "skipped"
                     report.steps.append(rep)
-                    if cm:
+                    if cm and record_cost:
                         cm.record(rep.answer_size, 0, 0.0, 0)
                     return
             res = relax_fd(
@@ -253,32 +393,48 @@ class Daisy:
             # detection/repair/merge entirely.
             rep.mode = "skipped"
             report.steps.append(rep)
-            if cm:
+            if cm and record_cost:
                 cm.record(rep.answer_size, rep.extra, 0.0, 0)
             return
         mesh = self._detect_mesh(step)
         self.detect_calls += 1
-        det = detect_fd_auto(
+        det, sinfo = detect_fd_auto_info(
             rel, fd, scope, k=self.config.k,
             mesh=mesh, n_shards=self.config.detect_shards,
         )
-        if will_shard(fd, mesh, self.config.detect_shards):
+        if sinfo is not None:
             rep.detect_path = "sharded"
+            self._observe_sharded(table, fd.name, sinfo, cm)
         self.repair_calls += 1
         deltas = fd_repair_candidates(rel, fd, det, repair_scope)
         rep.repaired = int(np.asarray(jnp.sum(det.violated & repair_scope)))
-        rel = self._apply(rel, deltas)
-        rel = self._mark(rel, fd.name, scope)
+        rel = self._apply(rel, deltas, table, fd.name)
+        rel = self._mark(rel, table, fd.name, scope)
         self.db[table] = rel
-        if cm:
+        if cm and record_cost:
             d_i = float(np.asarray(jnp.sum(scope)))
             cm.record(rep.answer_size, rep.extra, d_i, rep.repaired)
             if step.mode == "full":
                 cm.mark_switched()
         report.steps.append(rep)
 
+    def _observe_sharded(self, table: str, rule_name: str, info, cm) -> None:
+        """Record a sharded routing's ``ShardedDetectInfo`` and feed its
+        observed cost to the rule's cost model, so the full/partial decision
+        (and the background priority model, DESIGN.md §10) price the shuffle
+        path the executor will actually take."""
+        self.sharded_info[(table, rule_name)] = info
+        if cm is not None:
+            cm.observe_detect_cost(sharded_detect_cost(info, n_rows=cm.n))
+
     # ------------------------------------------------------------- DC steps
-    def _clean_dc(self, step: CleanStep, report: ExecReport) -> None:
+    def _clean_dc(
+        self, step: CleanStep, report: ExecReport, record_cost: bool = True
+    ) -> None:
+        """One DC cleaning step (mode resolved by Algorithm 2 when 'auto').
+        ``record_cost=False`` keeps background full cleans out of the
+        per-query cost-model history (they still mark the rule switched:
+        after one, nothing is left for the switch to buy)."""
         table, dc = step.table, step.rule
         rel = self.db[table]
         key = (table, dc.name)
@@ -318,7 +474,7 @@ class Daisy:
         if not bool(np.asarray(jnp.any(live))):
             rep.mode = "skipped"
             report.steps.append(rep)
-            if cm:
+            if cm and record_cost:
                 cm.record(rep.answer_size, 0, 0.0, 0)
             return
 
@@ -330,48 +486,57 @@ class Daisy:
             col_scope = rel.valid
 
         mesh = self._detect_mesh(step)
-        if will_shard(dc, mesh, self.config.detect_shards):
-            rep.detect_path = "sharded"
         self.detect_calls += 1
-        det = detect_dc_auto(
+        det, sinfo = detect_dc_auto_info(
             rel, dc, row_scope, col_scope, block=self.config.dc_block,
             mesh=mesh, n_shards=self.config.detect_shards,
         )
+        if sinfo is not None:
+            rep.detect_path = "sharded"
+            self._observe_sharded(table, dc.name, sinfo, cm)
         self.repair_calls += 1
         deltas = dc_repair_candidates(rel, dc, det, row_scope, k=self.config.k)
         repaired = (det.t1_count > 0) | (det.t2_count > 0)
         rep.repaired = int(np.asarray(jnp.sum(repaired & row_scope)))
-        rel = self._apply(rel, deltas)
+        rel = self._apply(rel, deltas, table, dc.name)
 
         if mode == "incremental":
             # partners of the answer (the DC-correlated tuples, §4.2) get their
             # role fixes too — the incremental matrix strip [rest x answer].
             partner_scope = rel.valid & ~answer
             self.detect_calls += 1
-            det2 = detect_dc_auto(
+            det2, sinfo2 = detect_dc_auto_info(
                 rel, dc, partner_scope, answer, block=self.config.dc_block,
                 mesh=mesh, n_shards=self.config.detect_shards,
             )
+            if sinfo2 is not None:
+                self._observe_sharded(table, dc.name, sinfo2, cm)
             self.repair_calls += 1
             deltas2 = dc_repair_candidates(rel, dc, det2, partner_scope, k=self.config.k)
-            rel = self._apply(rel, deltas2)
+            rel = self._apply(rel, deltas2, table, dc.name)
             rep.extra = int(
                 np.asarray(jnp.sum(((det2.t1_count > 0) | (det2.t2_count > 0)) & partner_scope))
             )
 
-        rel = self._mark(rel, dc.name, row_scope if mode != "full" else rel.valid)
+        rel = self._mark(
+            rel, table, dc.name, row_scope if mode != "full" else rel.valid
+        )
         self.db[table] = rel
         # support bookkeeping: diagonal partitions covered by this query
         p = self.config.dc_partitions
         sq = int(math.isqrt(p))
         covered = sq if mode != "full" else sq * (sq + 1) // 2
         self.checked_partitions[key] = self.checked_partitions.get(key, 0) + covered
-        if cm:
+        if cm and record_cost:
             n = cm.n
-            d_i = float(rep.answer_size) * n / max(p, 1) if mode != "full" else cm.df
+            d_i = (
+                float(rep.answer_size) * n / max(p, 1)
+                if mode != "full"
+                else cm.df_effective
+            )
             cm.record(rep.answer_size, rep.extra, d_i, rep.repaired)
-            if mode == "full":
-                cm.mark_switched()
+        if cm and mode == "full":
+            cm.mark_switched()
         report.steps.append(rep)
 
     # ------------------------------------------------------------ execution

@@ -67,6 +67,28 @@ def _fd_use_rhs(fd: FD, preds: Sequence[Pred], lemma1_fast_path: bool) -> bool:
     return not (pred_attrs and pred_attrs <= {fd.rhs})
 
 
+def full_clean_step(table: str, rule) -> CleanStep:
+    """The plan step a cost-model full-clean switch would inject, usable
+    standalone: the background cleaner (DESIGN.md §10) runs DC scopes through
+    it so background work takes exactly the foreground full path — including
+    the ``shardable`` mark that lets detection route over the mesh."""
+    return CleanStep(
+        table, rule, "pre", "full", True, (), bool(equality_key_attrs(rule))
+    )
+
+
+def probe_step(table: str, rule) -> CleanStep:
+    """An incremental step with no predicate filter: the executor substitutes
+    an explicit answer mask (``answer_override``).  Background FD increments
+    use it so a cold-group sweep runs the same relax -> detect -> repair ->
+    mark pipeline a foreground query selecting those groups would
+    (DESIGN.md §10), keeping the shardable mark consistent with the planner's.
+    """
+    return CleanStep(
+        table, rule, "post", "incremental", True, (), bool(equality_key_attrs(rule))
+    )
+
+
 def plan_query(
     query: Query,
     rules: Dict[str, Sequence[FD | DC]],

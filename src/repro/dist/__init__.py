@@ -2,15 +2,17 @@
 key-routed shuffle, sharded detection, and pipeline parallelism
 (DESIGN.md §6).
 
-Modules (kept import-light — model code imports ``hints`` at trace time):
+Modules:
 
     hints       ``hint(x, *axis_names)`` activation sharding constraints
     sharding    ``_PARAM_RULES`` / ``param_specs`` / ``batch_specs`` /
                 ``cache_specs`` / ``shardings`` — the dry-run lowering grid
-    collectives int8-compressed gradient all-reduce with error feedback;
-                see that module's docstring for the wire contract (per-
-                tensor symmetric scale, f32 residual carried by the caller,
-                mean-reduce over the data-parallel axes)
+    collectives int8-compressed gradient all-reduce with error feedback,
+                wired into train/steps.py behind ``grad_compress``; see
+                that module's docstring for the wire contract (per-tensor
+                symmetric scale, f32 residual carried by the caller in
+                ``opt_state["gerr"]``, mean-reduce over the data-parallel
+                axes)
     shuffle     ``shuffle_by_key`` — hash-route rows so each key lives on
                 exactly one shard; returns the inverse permutation
                 (``src``) and an overflow flag for skewed keys
@@ -18,4 +20,27 @@ Modules (kept import-light — model code imports ``hints`` at trace time):
                 detection over the routed layout, bit-identical to the
                 dense scans in core/detect.py (DESIGN.md §8)
     pipeline    ``pipeline_apply`` — GPipe over a "stage" mesh axis
+
+The package re-exports the sharded-detection surface below — in
+particular ``ShardedDetectInfo``, the routing observation (per-shard row
+counts, retry history) the executor feeds back into the cost model so the
+full/partial decision and the background cleaner's priority model price
+the shuffle path (DESIGN.md §10).  That import pulls jax; model code on
+the trace path that only needs activation hints keeps importing
+``repro.dist.hints`` directly (submodule imports stay cheap relative to
+the jax import the model already paid).
 """
+
+from repro.dist.detect import (
+    ShardedDetectInfo,
+    detect_dc_sharded,
+    detect_fd_sharded,
+    pair_count_report,
+)
+
+__all__ = [
+    "ShardedDetectInfo",
+    "detect_dc_sharded",
+    "detect_fd_sharded",
+    "pair_count_report",
+]

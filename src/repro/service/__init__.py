@@ -1,5 +1,6 @@
 """repro.service — concurrent query serving over the gradually-cleaned
-probabilistic instance (DESIGN.md §9).
+probabilistic instance (DESIGN.md §9), with cost-model-driven background
+cleaning behind the serving loop (§10).
 
 The paper's engine cleans *on demand*, driven by the queries users perform;
 this package is the layer that takes a stream of analytical queries from
@@ -9,27 +10,35 @@ between them:
 * ``server``     continuous-batching step loop (after serve/engine.py)
                  over a thread-safe submission queue;
 * ``scheduler``  tickets + rule/cluster batching so one clean_sigma pass
-                 pays for a whole batch of overlapping-σ queries;
-* ``cache``      clean-state-aware result cache keyed on
-                 (query fingerprint, clean_version);
+                 pays for a whole batch of overlapping-σ queries, and the
+                 ``rule_deps`` dependency sets the cache versions against;
+* ``cache``      clean-state-aware result cache keyed on (query
+                 fingerprint, per-scope version vector);
 * ``session``    per-user identity, lineage, and admission limits;
 * ``metrics``    queries/sec, cache effectiveness, detect/repair work
-                 amortized per query.
+                 amortized per query, foreground/background attribution;
+* ``background`` the ``BackgroundCleaner``: full-cleans cold rule scopes
+                 between serving steps so interactive queries stop paying
+                 even the first-touch detect.
 
 Sharing is sound because candidate-overlay merges are commutative and
 associative (Lemma 4, core/update.py) and the executor's checked-bit
 bookkeeping makes re-cleaning a no-op — concurrent sessions converge on
-one clean state, and equal ``clean_version``s guarantee bit-identical
-answers.
+one clean state, and equal version vectors over a query's dependency
+scopes guarantee bit-identical answers.  A concurrent background cleaner
+only accelerates that convergence (DESIGN.md §10).
 """
 
+from repro.service.background import BackgroundCleaner, IncrementReport
 from repro.service.cache import ResultCache
 from repro.service.metrics import ServiceMetrics
-from repro.service.scheduler import Ticket, batch_tickets, cluster_key
+from repro.service.scheduler import Ticket, batch_tickets, cluster_key, rule_deps
 from repro.service.server import QueryServer
 from repro.service.session import LineageEntry, Session, SessionLimitError
 
 __all__ = [
+    "BackgroundCleaner",
+    "IncrementReport",
     "LineageEntry",
     "QueryServer",
     "ResultCache",
@@ -39,4 +48,5 @@ __all__ = [
     "Ticket",
     "batch_tickets",
     "cluster_key",
+    "rule_deps",
 ]

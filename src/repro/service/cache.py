@@ -1,18 +1,29 @@
-"""Clean-state-aware result cache (DESIGN.md §9).
+"""Clean-state-aware result cache (DESIGN.md §9, refined in §10).
 
-Entries key on ``(query fingerprint, clean_version)``.  The executor bumps
-``Daisy.clean_version`` on every candidate-overlay merge and checked-bit
-commit, and its cleaning steps *skip* — no state change, no bump — whenever
-a query's scope is already checked for the rule.  Re-executing a query at
-an unchanged version is therefore a pure function of the probabilistic
-instance and returns bit-identical answers (the soundness contract,
-asserted in tests/test_service.py), so a hit never serves a stale answer:
-any cleaning progress since the entry was stored moved the version and
-invalidates the entry exactly then.
+Entries key on ``(query fingerprint, version)``, where the version the
+server passes is the *scope-version vector* over the query's dependency
+set (``scheduler.rule_deps``): one monotone counter per (table, rule)
+whose cleaning commits can change the answer.  The executor bumps a
+rule's scope version on every candidate-overlay merge and checked-bit
+commit for that rule, and its cleaning steps *skip* — no state change, no
+bump — whenever a query's scope is already checked.  Re-executing a query
+while its dependency vector is unchanged is therefore a pure function of
+the probabilistic instance and returns bit-identical answers (the
+soundness contract, asserted in tests/test_service.py), so a hit never
+serves a stale answer — and a background cleaner's commits on OTHER rules
+never invalidate it (exact-at-rule-granularity invalidation, asserted in
+tests/test_service_background.py).
 
-Entries store the *post*-execution version — the version the instance held
-when the answer was computed (``execute`` may itself advance the version
-while cleaning for the query; the answer reflects the advanced state).
+The cache itself is version-agnostic: it compares versions by equality
+only, so plain ``clean_version`` ints (the PR-3 keying) and dependency
+vectors both work.  Entries store the *post*-execution vector — the state
+the answer was computed at (``execute`` may itself advance versions while
+cleaning for the query; the answer reflects the advanced state).
+
+Thread-safety: NOT internally locked.  The server performs every
+lookup/insert while holding the executor's lock (``Daisy.lock``), which
+also serializes it against the background cleaner's commits — that lock
+is this structure's synchronization.
 
 Cached ``DaisyResult``s are shared by reference across sessions; they are
 treated as immutable (device arrays + a report nobody mutates).
@@ -25,7 +36,8 @@ from typing import Dict, Optional, Tuple
 
 
 class ResultCache:
-    """LRU over (fingerprint -> (clean_version, result))."""
+    """LRU over (fingerprint -> (version, result)); see the module
+    docstring for the versioning and locking contract."""
 
     def __init__(self, capacity: int = 256):
         if capacity < 1:
@@ -37,7 +49,9 @@ class ResultCache:
         self.stale = 0  # fingerprint present but clean_version moved on
         self.evictions = 0
 
-    def get(self, fingerprint: str, clean_version: int) -> Optional[object]:
+    def get(self, fingerprint: str, clean_version) -> Optional[object]:
+        """Return the cached result iff its stored version equals
+        ``clean_version`` (int or dependency vector); drop stale entries."""
         entry = self._entries.get(fingerprint)
         if entry is None:
             self.misses += 1
@@ -57,14 +71,16 @@ class ResultCache:
         self._entries.move_to_end(fingerprint)
         return result
 
-    def put(self, fingerprint: str, clean_version: int, result: object) -> None:
+    def put(self, fingerprint: str, clean_version, result: object) -> None:
+        """Insert/refresh an entry at its post-execution version."""
         self._entries[fingerprint] = (clean_version, result)
         self._entries.move_to_end(fingerprint)
         while len(self._entries) > self.capacity:
             self._entries.popitem(last=False)
             self.evictions += 1
 
-    def version_of(self, fingerprint: str) -> Optional[int]:
+    def version_of(self, fingerprint: str):
+        """The stored version of an entry (None when absent) — test hook."""
         entry = self._entries.get(fingerprint)
         return None if entry is None else entry[0]
 
@@ -72,6 +88,7 @@ class ResultCache:
         return len(self._entries)
 
     def stats(self) -> Dict[str, int]:
+        """Counter snapshot (plain ints; same locking contract as above)."""
         return {
             "entries": len(self._entries),
             "capacity": self.capacity,

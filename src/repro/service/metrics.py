@@ -1,49 +1,86 @@
-"""Serving metrics (DESIGN.md §9): throughput, cache effectiveness, and the
-cleaning work one shared probabilistic instance amortizes across sessions.
+"""Serving metrics (DESIGN.md §9/§10): throughput, cache effectiveness, and
+the cleaning work one shared probabilistic instance amortizes across
+sessions — now attributed between the foreground serving path and the
+background cleaner.
 
-All counters are plain host ints mutated by the single serving thread (the
-step loop), so ``snapshot()`` is always self-consistent; it returns only
-JSON-serializable scalars plus the last few serialized ``StepReport`` dicts
-(``StepReport.asdict``) for drill-down.  The interesting derived number is
-``detect_repair_per_query``: detect/repair invocations divided by queries
-answered — the paper's incremental-cleaning cost, amortized further by the
-clean-state-aware cache (benchmarks/serve_throughput.py plots it against
-the cacheless and offline baselines).
+Thread-safety contract: the foreground observers (``observe_hit``,
+``observe_execution``, ``observe_work``) and the step/idle counters are
+mutated by the single serving thread only; the background observers
+(``observe_background``, ``observe_bg_yield``) are mutated by the cleaner
+thread under ``_bg_lock``.  All counters are monotone host ints/floats,
+so ``snapshot()`` — which reads both groups — is always a consistent
+*approximation* under concurrency and exact once both threads quiesce.
+It returns only JSON-serializable scalars plus the last few serialized
+``StepReport`` dicts (``StepReport.asdict``) for drill-down.
+
+The two derived numbers the layer exists for:
+
+* ``detect_repair_per_query`` — *foreground* detect/repair invocations per
+  answered query, the paper's incremental-cleaning cost amortized by the
+  clean-state-aware cache AND by background warmup
+  (benchmarks/serve_bg_warmup.py gates that background cleaning strictly
+  lowers it against the same workload without it);
+* ``idle_fraction`` — share of serving wall-clock the step loop spent
+  waiting for work: the budget the background cleaner runs in.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Dict, List
 
 
 @dataclasses.dataclass
 class ServiceMetrics:
+    """Counters for one server (+ optional background cleaner) lifetime.
+
+    Foreground fields are serving-thread-only; fields prefixed ``bg_`` are
+    cleaner-thread-only (guarded by ``_bg_lock``); see the module
+    docstring for the full contract.  ``detect_calls``/``repair_calls``
+    count FOREGROUND work — the executor's own counters hold the total,
+    so background work is the difference and is tracked explicitly in the
+    ``bg_*`` fields.
+    """
+
     queries: int = 0  # tickets answered (hit or executed)
     steps: int = 0  # step-loop iterations that served >= 1 ticket
     executions: int = 0  # Daisy.execute calls (cache misses)
     cache_hits: int = 0
     batched: int = 0  # hits on a fingerprint executed earlier in the same step
-    detect_calls: int = 0  # executor detect invocations while serving
+    detect_calls: int = 0  # executor detect invocations while serving (fg)
     repair_calls: int = 0
     clean_steps: int = 0  # non-skipped cleaning steps across executions
     skipped_steps: int = 0
     rejected: int = 0  # session-limit denials
     errors: int = 0
+    serving_idle_s: float = 0.0  # step-loop time spent waiting for work
+    # background cleaner attribution (DESIGN.md §10)
+    bg_increments: int = 0  # clean_scope_increment calls that did work
+    bg_detect_calls: int = 0
+    bg_repair_calls: int = 0
+    bg_scopes_completed: int = 0  # increments that left their scope warm
+    bg_yields: int = 0  # times the cleaner deferred to pending tickets
+    bg_busy_s: float = 0.0  # wall-clock spent inside increments
     max_reports: int = 32
     recent_reports: List[Dict[str, object]] = dataclasses.field(default_factory=list)
     started: float = dataclasses.field(default_factory=time.perf_counter)
+    _bg_lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False, compare=False
+    )
 
     # ------------------------------------------------------------ observers
     def observe_hit(self, same_step: bool) -> None:
+        """Record one cache hit (serving thread)."""
         self.queries += 1
         self.cache_hits += 1
         if same_step:
             self.batched += 1
 
     def observe_execution(self, report) -> None:
-        """Record one cache-miss execution from its ``ExecReport``."""
+        """Record one cache-miss execution from its ``ExecReport``
+        (serving thread)."""
         self.queries += 1
         self.executions += 1
         for step in report.steps:
@@ -55,28 +92,63 @@ class ServiceMetrics:
         del self.recent_reports[: -self.max_reports]
 
     def observe_work(self, detect_delta: int, repair_delta: int) -> None:
+        """Attribute executor detect/repair deltas to the foreground
+        serving path (serving thread)."""
         self.detect_calls += detect_delta
         self.repair_calls += repair_delta
+
+    def observe_idle(self, seconds: float) -> None:
+        """Accumulate step-loop wait time (serving thread)."""
+        self.serving_idle_s += seconds
+
+    def observe_background(
+        self, detect_delta: int, repair_delta: int, busy_s: float,
+        scope_completed: bool,
+    ) -> None:
+        """Attribute one background increment's work (cleaner thread)."""
+        with self._bg_lock:
+            self.bg_increments += 1
+            self.bg_detect_calls += detect_delta
+            self.bg_repair_calls += repair_delta
+            self.bg_busy_s += busy_s
+            if scope_completed:
+                self.bg_scopes_completed += 1
+
+    def observe_bg_yield(self) -> None:
+        """Record the cleaner deferring to foreground work (cleaner thread)."""
+        with self._bg_lock:
+            self.bg_yields += 1
 
     # -------------------------------------------------------------- derived
     @property
     def elapsed(self) -> float:
+        """Wall-clock seconds since construction (monotone clock)."""
         return max(time.perf_counter() - self.started, 1e-9)
 
     @property
     def queries_per_sec(self) -> float:
+        """Answered tickets per wall-clock second."""
         return self.queries / self.elapsed
 
     @property
     def hit_rate(self) -> float:
+        """Fraction of answered tickets served from the cache."""
         return self.cache_hits / max(self.queries, 1)
 
     @property
     def detect_repair_per_query(self) -> float:
-        """Cleaning work amortized per answered query."""
+        """Foreground cleaning work amortized per answered query."""
         return (self.detect_calls + self.repair_calls) / max(self.queries, 1)
 
+    @property
+    def idle_fraction(self) -> float:
+        """Share of elapsed wall-clock the step loop spent idle — the
+        background cleaner's available budget."""
+        return min(self.serving_idle_s / self.elapsed, 1.0)
+
     def snapshot(self) -> Dict[str, object]:
+        """JSON-serializable counter snapshot with foreground/background
+        attribution nested under ``foreground``/``background``."""
         return {
             "queries": self.queries,
             "steps": self.steps,
@@ -93,5 +165,18 @@ class ServiceMetrics:
             "queries_per_sec": round(self.queries_per_sec, 3),
             "hit_rate": round(self.hit_rate, 4),
             "detect_repair_per_query": round(self.detect_repair_per_query, 4),
+            "idle_fraction": round(self.idle_fraction, 4),
+            "foreground": {
+                "detect_calls": self.detect_calls,
+                "repair_calls": self.repair_calls,
+            },
+            "background": {
+                "increments": self.bg_increments,
+                "detect_calls": self.bg_detect_calls,
+                "repair_calls": self.bg_repair_calls,
+                "scopes_completed": self.bg_scopes_completed,
+                "yields": self.bg_yields,
+                "busy_s": round(self.bg_busy_s, 6),
+            },
             "recent_reports": list(self.recent_reports),
         }

@@ -13,6 +13,16 @@ at an unchanged version) or executes with its cleaning steps skipped
 tickets keep arrival order within a group, so scheduling only ever pulls
 same-cluster work together; the equivalence tests assert the batched
 answers stay bit-identical to a serial fresh-instance run.
+
+``rule_deps`` is the cache side of the same overlap computation: the
+(table, rule) scopes whose cleaning commits can change a query's answer —
+what the server versions cache entries against so a background cleaner's
+commits invalidate exactly the overlapping fingerprints (DESIGN.md §10).
+
+Thread-safety: everything here is pure functions over immutable inputs
+plus the ``Ticket`` record; a ticket is written by the serving thread and
+waited on via its ``event`` by the submitting thread — fields other than
+``event`` are read by the submitter only after ``event`` is set.
 """
 
 from __future__ import annotations
@@ -30,12 +40,16 @@ from repro.service.session import Session
 @dataclasses.dataclass
 class Ticket:
     """One submitted query: filled in by the serving thread, waited on by the
-    submitting session's thread."""
+    submitting session's thread (``wait`` blocks on ``event``; every other
+    field is safe to read only after ``event`` is set)."""
 
     seq: int
     session: Session
     query: Query
     fingerprint: str
+    # the (table, rule) scopes this query's answer depends on — computed at
+    # submit, versioned by the cache (DESIGN.md §10)
+    deps: Tuple[Tuple[str, str], ...] = ()
     event: threading.Event = dataclasses.field(default_factory=threading.Event)
     result: Optional[object] = None  # DaisyResult once served
     cached: bool = False
@@ -53,6 +67,27 @@ class Ticket:
         return self.result
 
 
+def rule_deps(query: Query, rules: Dict[str, Sequence]) -> Tuple[Tuple[str, str], ...]:
+    """The (table, rule) scopes whose cleaning can change this query's
+    answer: rules on the query's tables whose attributes overlap the
+    query's ((X u Y) n (P u W) != {}, §4.1).
+
+    Repairs only ever merge candidates for a rule's own attributes, so a
+    commit for a non-overlapping rule cannot move this query's answer —
+    the cache keys entries on the version vector over exactly this set
+    (DESIGN.md §10).  A query overlapping no rule depends on nothing
+    mutable and its cache entries never go stale.
+    """
+    tables = (query.table,) + tuple(j.right for j in query.joins)
+    attrs = query.attrs
+    out: List[Tuple[str, str]] = []
+    for t in tables:
+        for rule in rules.get(t, ()):
+            if overlaps_query(rule, attrs):
+                out.append((t, rule.name))
+    return tuple(out)
+
+
 def cluster_key(query: Query, rules: Dict[str, Sequence]) -> Tuple:
     """The (rules, σ) cluster a query's cleaning work belongs to.
 
@@ -62,14 +97,11 @@ def cluster_key(query: Query, rules: Dict[str, Sequence]) -> Tuple:
     first execution's detect/repair pass covers both.  Queries overlapping
     no rule cluster by fingerprint alone (nothing to share but the cache).
     """
-    tables = (query.table,) + tuple(j.right for j in query.joins)
-    attrs = query.attrs
-    overlapping: List[Tuple[str, str]] = []
+    overlapping = rule_deps(query, rules)
     rule_cols: set = set()
-    for t in tables:
+    for t, rule_name in overlapping:
         for rule in rules.get(t, ()):
-            if overlaps_query(rule, attrs):
-                overlapping.append((t, rule.name))
+            if rule.name == rule_name:
                 rule_cols.update(rule_attrs(rule))
     sigma = tuple(
         sorted(

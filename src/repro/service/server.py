@@ -1,4 +1,5 @@
-"""Concurrent query serving over one shared Daisy instance (DESIGN.md §9).
+"""Concurrent query serving over one shared Daisy instance (DESIGN.md §9,
+background cleaning §10).
 
 The step loop is continuous batching in the spirit of
 ``serve/engine.py``'s slot table: submitted tickets queue in arrival
@@ -9,25 +10,35 @@ step — sessions never wait for a "round" to finish.
 
 Threading model: ``submit`` is fully thread-safe (many client threads,
 one condition-guarded queue); the step loop is intended to run on ONE
-serving thread (``run``), which makes batching deterministic.  The
-executor itself is re-entrant (``Daisy.execute`` locks), so even misuse —
-multiple step threads — degrades to query-granularity interleaving rather
-than torn state.
+serving thread (``run``), which makes batching deterministic.  Each
+ticket is served while holding the executor's lock (``Daisy.lock``), so
+the version-vector read, cache lookup, execution, and insert are atomic
+with respect to a concurrent ``BackgroundCleaner`` — whose increments
+take the same lock, making ticket boundaries the preemption points.  The
+executor itself is re-entrant, so even misuse — multiple step threads —
+degrades to query-granularity interleaving rather than torn state.
 
-Serving a ticket: consult the cache at the *current* clean version; on a
-hit the answer is returned without touching the executor (this is where
-repeated exploratory workloads win); on a miss the shared executor runs
-the query — cleaning the gradually-cleaned instance as a side effect —
-and the answer is cached at the post-execution version.  Duplicate
-fingerprints inside one step resolve the same way: the first execution's
-version is current for the second ticket unless an intervening execution
-advanced the instance, in which case the duplicate re-executes exactly as
-a serial run would.
+Serving a ticket: consult the cache at the query's *current* dependency
+version vector (``scope_versions`` over ``rule_deps`` — so cleaning
+commits for non-overlapping rules, foreground or background, never
+invalidate it); on a hit the answer is returned without touching the
+executor (this is where repeated exploratory workloads win); on a miss
+the shared executor runs the query — cleaning the gradually-cleaned
+instance as a side effect — and the answer is cached at the
+post-execution vector.  Duplicate fingerprints inside one step resolve
+the same way: the first execution's vector is current for the second
+ticket unless an intervening execution advanced a dependency, in which
+case the duplicate re-executes exactly as a serial run would.
+
+The background handoff signal: ``pending_count`` and ``wait_idle`` let a
+``BackgroundCleaner`` defer to foreground work — the queue going
+non-empty clears the idle event, draining it sets the event again.
 """
 
 from __future__ import annotations
 
 import threading
+import time
 from collections import deque
 from typing import Deque, Dict, List, Optional
 
@@ -35,11 +46,17 @@ from repro.core.executor import Daisy
 from repro.core.operators import Query, query_fingerprint
 from repro.service.cache import ResultCache
 from repro.service.metrics import ServiceMetrics
-from repro.service.scheduler import Ticket, batch_tickets
+from repro.service.scheduler import Ticket, batch_tickets, rule_deps
 from repro.service.session import LineageEntry, Session, SessionLimitError
 
 
 class QueryServer:
+    """The serving facade: sessions submit queries, one serving thread
+    steps them through cache + shared executor (module docstring has the
+    full threading contract).  ``sessions`` is guarded by ``_lock``; the
+    pending deque by ``_work`` (same lock object as ``_lock``); everything
+    the executor owns by ``daisy.lock``."""
+
     def __init__(
         self,
         daisy: Daisy,
@@ -55,15 +72,28 @@ class QueryServer:
         self._pending: Deque[Ticket] = deque()
         self._lock = threading.Lock()
         self._work = threading.Condition(self._lock)
+        # set <=> no ticket queued OR admitted-but-unserved: the background
+        # cleaner must stay preempted for a whole in-flight batch, not just
+        # until step() pops it off the queue
+        self._idle = threading.Event()
+        self._idle.set()
+        self._inflight_batch = 0
         self._seq = 0
         self._stopping = False
 
     # ------------------------------------------------------------- sessions
     def open_session(self, sid: Optional[str] = None, **limits) -> Session:
+        """Create and register a session (thread-safe)."""
         session = Session(sid, **limits)
         with self._lock:
             self.sessions[session.sid] = session
         return session
+
+    def session_list(self) -> List[Session]:
+        """Snapshot of registered sessions (thread-safe; the background
+        cleaner aggregates lineage touch counts over it)."""
+        with self._lock:
+            return list(self.sessions.values())
 
     # ------------------------------------------------------------ admission
     def submit(self, session: Session, query: Query) -> Ticket:
@@ -83,9 +113,11 @@ class QueryServer:
                 session=session,
                 query=query,
                 fingerprint=query_fingerprint(query),
+                deps=rule_deps(query, self.daisy.rules),
             )
             self._seq += 1
             self._pending.append(ticket)
+            self._idle.clear()
             self._work.notify()
         return ticket
 
@@ -94,55 +126,88 @@ class QueryServer:
         thread; synchronous callers use ``submit`` + ``drain`` instead)."""
         return self.submit(session, query).wait(timeout)
 
+    # ----------------------------------------------------- background signal
+    def pending_count(self) -> int:
+        """Number of unserved foreground tickets (queued plus the batch a
+        step is currently serving) — the background cleaner checks this
+        between increments and yields when > 0."""
+        with self._lock:
+            return len(self._pending) + self._inflight_batch
+
+    def wait_idle(self, timeout: Optional[float] = None) -> bool:
+        """Block until the pending queue is empty (the handoff signal a
+        background cleaner waits on); returns False on timeout."""
+        return self._idle.wait(timeout)
+
     # ------------------------------------------------------------- step loop
     def step(self) -> int:
         """Admit up to ``max_batch`` pending tickets and serve them grouped
-        by cluster.  Returns the number of tickets served."""
+        by cluster.  Returns the number of tickets served.  Single serving
+        thread only (see module docstring)."""
         with self._lock:
             batch: List[Ticket] = []
             while self._pending and len(batch) < self.max_batch:
                 batch.append(self._pending.popleft())
+            self._inflight_batch = len(batch)
+            if not batch:
+                self._idle.set()
         if not batch:
             return 0
-        executed_this_step: set = set()
-        for group in batch_tickets(batch, self.daisy.rules):
-            for ticket in group:
-                self._serve(ticket, executed_this_step)
+        try:
+            executed_this_step: set = set()
+            for group in batch_tickets(batch, self.daisy.rules):
+                for ticket in group:
+                    self._serve(ticket, executed_this_step)
+        finally:
+            # the cleaner may resume only once the whole batch is answered
+            with self._lock:
+                self._inflight_batch = 0
+                if not self._pending:
+                    self._idle.set()
         self.metrics.steps += 1
         return len(batch)
 
     def _serve(self, ticket: Ticket, executed_this_step: set) -> None:
+        """Serve one ticket under the executor lock (atomic versus the
+        background cleaner: vector read, cache lookup, execute, insert)."""
         daisy = self.daisy
-        d0, r0 = daisy.detect_calls, daisy.repair_calls
-        result = self.cache.get(ticket.fingerprint, daisy.clean_version)
-        if result is not None:
-            ticket.cached = True
-            self.metrics.observe_hit(same_step=ticket.fingerprint in executed_this_step)
-        else:
-            try:
-                result = daisy.execute(ticket.query)
-            except Exception as exc:  # surface to the caller, keep serving
-                self.metrics.errors += 1
-                # partial cleaning work before the failure still happened
-                self.metrics.observe_work(
-                    daisy.detect_calls - d0, daisy.repair_calls - r0
+        with daisy.lock:
+            d0, r0 = daisy.detect_calls, daisy.repair_calls
+            vector = daisy.scope_versions(ticket.deps)
+            result = self.cache.get(ticket.fingerprint, vector)
+            if result is not None:
+                ticket.cached = True
+                self.metrics.observe_hit(
+                    same_step=ticket.fingerprint in executed_this_step
                 )
-                ticket.error = exc
-                ticket.session.fail()
-                ticket.event.set()
-                return
-            self.cache.put(ticket.fingerprint, daisy.clean_version, result)
-            executed_this_step.add(ticket.fingerprint)
-            self.metrics.observe_execution(result.report)
-        self.metrics.observe_work(daisy.detect_calls - d0, daisy.repair_calls - r0)
-        ticket.result = result
-        ticket.clean_version = daisy.clean_version
+            else:
+                try:
+                    result = daisy.execute(ticket.query)
+                except Exception as exc:  # surface to the caller, keep serving
+                    self.metrics.errors += 1
+                    # partial cleaning work before the failure still happened
+                    self.metrics.observe_work(
+                        daisy.detect_calls - d0, daisy.repair_calls - r0
+                    )
+                    ticket.error = exc
+                    ticket.session.fail()
+                    ticket.event.set()
+                    return
+                self.cache.put(
+                    ticket.fingerprint, daisy.scope_versions(ticket.deps), result
+                )
+                executed_this_step.add(ticket.fingerprint)
+                self.metrics.observe_execution(result.report)
+            self.metrics.observe_work(daisy.detect_calls - d0, daisy.repair_calls - r0)
+            ticket.result = result
+            ticket.clean_version = daisy.clean_version
         ticket.session.complete(
             LineageEntry(
                 fingerprint=ticket.fingerprint,
-                clean_version=daisy.clean_version,
+                clean_version=ticket.clean_version,
                 result_size=result.report.result_size,
                 cached=ticket.cached,
+                rules=ticket.deps,
             )
         )
         ticket.event.set()
@@ -162,7 +227,8 @@ class QueryServer:
         """Serving-thread loop: step while work arrives; exit once ``stop()``
         was called and the queue drained.  ``max_steps`` is a runaway
         backstop and counts only steps that served work — idling forever is
-        fine."""
+        fine.  Idle wait time feeds the ``idle_fraction`` gauge (the
+        background cleaner's budget)."""
         served_steps = 0
         while served_steps < max_steps:
             if self.step():
@@ -171,14 +237,20 @@ class QueryServer:
             with self._work:
                 if self._stopping and not self._pending:
                     return
+                t0 = time.perf_counter()
                 self._work.wait(timeout=idle_wait)
+                self.metrics.observe_idle(time.perf_counter() - t0)
 
     def stop(self) -> None:
+        """Refuse new submissions and wake the serving thread to exit after
+        the queue drains (thread-safe)."""
         with self._work:
             self._stopping = True
             self._work.notify_all()
 
     def snapshot(self) -> Dict[str, object]:
+        """JSON-serializable state: metrics (with foreground/background
+        attribution), cache stats, clean version, per-session summaries."""
         snap = self.metrics.snapshot()
         snap["cache"] = self.cache.stats()
         snap["clean_version"] = self.daisy.clean_version

@@ -2,15 +2,23 @@
 
 A ``Session`` is the unit of admission control and provenance.  Lineage
 records, per answered query, the fingerprint, the clean-state version the
-answer was computed at, and whether it came from the cache — enough to
-re-derive *which* probabilistic instance a user's past answer reflects
-(the gradually-cleaned database changes under them by design, §6).
+answer was computed at, the rule scopes the answer depended on, and
+whether it came from the cache — enough to re-derive *which*
+probabilistic instance a user's past answer reflects (the
+gradually-cleaned database changes under them by design, §6), and enough
+for the background cleaner's priority model to estimate per-scope touch
+probabilities from what sessions actually query (DESIGN.md §10).
 
 Limits are enforced at submit time: ``max_inflight`` bounds a session's
 concurrently queued tickets (back-pressure per user), ``max_queries``
 bounds its lifetime total (quota).  Violations raise ``SessionLimitError``
 — the server surfaces them to the caller without touching the shared
 executor.
+
+Thread-safety: every mutating method and every reader of compound state
+takes the session's own ``_lock`` (client threads call ``admit``; the
+serving thread calls ``complete``/``fail``; the background cleaner calls
+``rule_touches``).  Counter fields are only ever written under that lock.
 """
 
 from __future__ import annotations
@@ -18,7 +26,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import threading
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 
 class SessionLimitError(RuntimeError):
@@ -27,16 +35,26 @@ class SessionLimitError(RuntimeError):
 
 @dataclasses.dataclass(frozen=True)
 class LineageEntry:
+    """Provenance of one answered query (immutable; safe to share across
+    threads once appended to a session's lineage under its lock)."""
+
     fingerprint: str
     clean_version: int
     result_size: int
     cached: bool
+    # the (table, rule) scopes the answer depended on (``rule_deps``) —
+    # the background priority model's touch-probability signal
+    rules: Tuple[Tuple[str, str], ...] = ()
 
 
 _SIDS = itertools.count()
 
 
 class Session:
+    """One user's admission state and answer provenance (module docstring
+    has the locking contract; ``submitted``/``answered``/``failed`` are
+    monotone counters, ``inflight`` is the only one that also decreases)."""
+
     def __init__(
         self,
         sid: Optional[str] = None,
@@ -71,6 +89,7 @@ class Session:
             self.inflight += 1
 
     def complete(self, entry: LineageEntry) -> None:
+        """Record one answered query (serving thread)."""
         with self._lock:
             self.inflight -= 1
             self.answered += 1
@@ -78,12 +97,26 @@ class Session:
             del self.lineage[: -self.max_lineage]
 
     def fail(self) -> None:
+        """Release the inflight slot of a submission that errored."""
         with self._lock:
             self.inflight -= 1
             self.failed += 1
 
     # ------------------------------------------------------------- reporting
+    def rule_touches(self) -> Dict[Tuple[str, str], int]:
+        """How often each (table, rule) scope appeared in this session's
+        retained lineage — the background priority model's touch signal
+        (recency-weighted for free by the ``max_lineage`` cap)."""
+        with self._lock:
+            touches: Dict[Tuple[str, str], int] = {}
+            for entry in self.lineage:
+                for dep in entry.rules:
+                    touches[dep] = touches.get(dep, 0) + 1
+            return touches
+
     def snapshot(self) -> Dict[str, object]:
+        """JSON-serializable state summary (consistent: taken under the
+        session lock)."""
         with self._lock:
             return {
                 "sid": self.sid,

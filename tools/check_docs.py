@@ -1,10 +1,20 @@
 #!/usr/bin/env python
-"""Fail when src/ cites a DESIGN.md section that has no matching header.
+"""Fail when the repo's docs rot: dangling DESIGN.md section citations,
+dangling markdown links/anchors, or undocumented public service API.
 
-Docstrings reference design sections as ``DESIGN.md §N``; DESIGN.md marks
-section headers as ``## §N Title``.  This check keeps the two in sync the
-same way the collect-only CI job keeps imports in sync: a citation to a
-section that was renumbered or never written fails in seconds.
+Three checks, all static (stdlib only — the CI docs job runs without jax):
+
+1. **Section citations.**  Docstrings reference design sections as
+   ``DESIGN.md §N``; DESIGN.md marks section headers as ``## §N Title``.
+   A citation to a section that was renumbered or never written fails.
+2. **Markdown links.**  Every relative link target in README.md and
+   DESIGN.md must exist, and every ``#fragment`` must resolve to a
+   heading of the target file (GitHub-style slugs).
+3. **Service docstrings.**  Every public module/class/function/method in
+   ``src/repro/service/`` must carry a docstring — the layer's
+   thread-safety contracts live there (DESIGN.md §9/§10), so a missing
+   docstring is missing documentation of who may touch what under which
+   lock.
 
 Run from the repo root (CI docs job and tests/test_docs.py both do):
 
@@ -13,6 +23,7 @@ Run from the repo root (CI docs job and tests/test_docs.py both do):
 
 from __future__ import annotations
 
+import ast
 import pathlib
 import re
 import sys
@@ -21,6 +32,9 @@ ROOT = pathlib.Path(__file__).resolve().parents[1]
 
 CITE = re.compile(r"DESIGN\.md\s*§(\d+)")
 HEADER = re.compile(r"^#+\s*§(\d+)\b", re.M)
+# [text](target) — target without scheme/mailto is a repo-relative link
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+MD_HEADING = re.compile(r"^#+\s+(.*)$", re.M)
 
 
 def cited_sections() -> dict[str, set[str]]:
@@ -32,6 +46,105 @@ def cited_sections() -> dict[str, set[str]]:
     return cites
 
 
+# ------------------------------------------------------------- markdown links
+def heading_slugs(md_text: str) -> set[str]:
+    """GitHub-style anchor slugs for every heading: lowercase, punctuation
+    stripped (including '§'), spaces to dashes."""
+    slugs = set()
+    for title in MD_HEADING.findall(md_text):
+        title = re.sub(r"[`*_]", "", title).strip()
+        slug = re.sub(r"[^\w\- ]", "", title.lower())
+        slugs.add(re.sub(r" +", "-", slug.strip()))
+    return slugs
+
+
+def link_problems(md_text: str, source: str, root: pathlib.Path) -> list[str]:
+    """Dangling relative links/anchors in one markdown document.  Pure
+    function of the text (unit-tested directly in tests/test_docs.py)."""
+    problems = []
+    for target in LINK.findall(md_text):
+        if re.match(r"^[a-z][a-z0-9+.-]*:", target):  # http:, mailto:, ...
+            continue
+        path_part, _, fragment = target.partition("#")
+        if path_part:
+            dest = (root / path_part).resolve()
+            if not dest.exists():
+                problems.append(f"{source}: link target {path_part!r} does not exist")
+                continue
+        else:
+            dest = root / source
+        if fragment:
+            if dest.suffix != ".md" or not dest.is_file():
+                problems.append(
+                    f"{source}: anchor {target!r} points into a non-markdown target"
+                )
+                continue
+            if fragment not in heading_slugs(dest.read_text()):
+                problems.append(
+                    f"{source}: anchor #{fragment} has no matching heading in "
+                    f"{dest.name}"
+                )
+    return problems
+
+
+def markdown_problems() -> list[str]:
+    problems = []
+    for name in ("README.md", "DESIGN.md"):
+        path = ROOT / name
+        if path.exists():
+            problems += link_problems(path.read_text(), name, ROOT)
+    return problems
+
+
+# --------------------------------------------------------- service docstrings
+def _missing_docstrings(tree: ast.Module, rel: str) -> list[str]:
+    missing = []
+    if ast.get_docstring(tree) is None:
+        missing.append(f"{rel}: module has no docstring")
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+            if node.name.startswith("_"):
+                continue
+            if ast.get_docstring(node) is None:
+                missing.append(f"{rel}: public {node.name!r} has no docstring")
+            if isinstance(node, ast.ClassDef):
+                for sub in node.body:
+                    if (
+                        isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef))
+                        and not sub.name.startswith("_")
+                        and ast.get_docstring(sub) is None
+                    ):
+                        missing.append(
+                            f"{rel}: public method "
+                            f"{node.name}.{sub.name!r} has no docstring"
+                        )
+    return missing
+
+
+def service_docstring_problems() -> list[str]:
+    """Undocumented public symbols under src/repro/service/ (ast-based, so
+    the check needs no imports and runs in the bare docs job)."""
+    problems = []
+    for path in sorted((ROOT / "src" / "repro" / "service").glob("*.py")):
+        rel = str(path.relative_to(ROOT))
+        problems += _missing_docstrings(ast.parse(path.read_text()), rel)
+    return problems
+
+
+def public_service_symbols() -> int:
+    """Count of public defs the docstring check covers (non-vacuity probe
+    for tests)."""
+    count = 0
+    for path in sorted((ROOT / "src" / "repro" / "service").glob("*.py")):
+        for node in ast.walk(ast.parse(path.read_text())):
+            if isinstance(
+                node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)
+            ) and not node.name.startswith("_"):
+                count += 1
+    return count
+
+
+# ------------------------------------------------------------------ top level
 def check() -> list[str]:
     problems = []
     design = ROOT / "DESIGN.md"
@@ -46,6 +159,8 @@ def check() -> list[str]:
             )
     if not (ROOT / "README.md").exists():
         problems.append("README.md does not exist")
+    problems += markdown_problems()
+    problems += service_docstring_problems()
     return problems
 
 
@@ -58,7 +173,8 @@ def main() -> int:
         total = sum(len(v) for v in cites.values())
         print(
             f"docs OK: {len(cites)} DESIGN.md sections cited from "
-            f"{total} file references"
+            f"{total} file references; markdown links resolve; "
+            f"{public_service_symbols()} public service symbols documented"
         )
     return 1 if problems else 0
 
