@@ -5,11 +5,9 @@ from __future__ import annotations
 import csv
 import os
 import time
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, List, Optional, Sequence
 
-import numpy as np
-
-from repro.core.constraints import DC, FD, Atom
+from repro.core.constraints import FD
 from repro.core.executor import Daisy, DaisyConfig
 from repro.core.offline import OfflineCleaner
 from repro.core.operators import Pred, Query

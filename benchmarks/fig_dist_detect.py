@@ -1,0 +1,175 @@
+"""Dense vs sharded DC/FD detection on a large synthetic relation
+(DESIGN.md §8; the fig-style benchmark the ROADMAP distribution section
+called for).
+
+The rule carries a same-attribute equality atom, so the sharded path can
+hash-route rows by the equality key (``shuffle_by_key``) and run the
+``dc_pairs`` role scans per logical shard: the comparison space drops
+from ``n^2`` to ``sum_s rows_s^2`` (~``n^2 / shards`` under uniform
+keys) at the cost of one all-to-all of the routed payload.  On a
+single-device CPU run the per-shard scans execute as a ``vmap`` over the
+logical shards — identical numerics to the mesh execution, which is what
+lets the bit-identity gate run everywhere.
+
+Acceptance gates (smoked in CI):
+
+* sharded results bit-identical to the dense scans, row for row, for
+  every shard count (DC counts/stats and FD candidate tables);
+* the sharded comparison space is strictly smaller than the dense one at
+  every shard count, and shrinks monotonically as shards grow;
+* the routing info reports per-shard source-strip coverage (the work
+  ledger's grid, DESIGN.md §11) summing to at least the strip count of
+  the routed rows — the per-host work-partition signal the sharded
+  service will consume.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+
+from benchmarks.common import write_csv
+from repro.core.constraints import DC, FD, Atom
+from repro.core.detect import detect_dc, detect_fd
+from repro.core.relation import make_relation
+from repro.dist.detect import detect_dc_sharded_info, detect_fd_sharded_info
+
+
+def one_device_mesh():
+    from jax.sharding import Mesh
+
+    return Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+
+
+def build(n: int, n_regions: int, seed: int = 13):
+    """Synthetic orders: price/discount must be monotone-consistent WITHIN
+    a region (the equality atom that makes the DC routable); noise plants
+    cross-row inversions inside regions."""
+    rng = np.random.default_rng(seed)
+    region = rng.integers(0, n_regions, n).astype(np.int32)
+    price = rng.uniform(1000.0, 5000.0, n).astype(np.float32)
+    discount = (6000.0 - price + rng.normal(0, 150.0, n)).astype(np.float32)
+    supp = rng.integers(0, 64, n).astype(np.int32)
+    return make_relation(
+        {"region": region, "extended_price": price, "discount": discount,
+         "orderkey": region, "suppkey": supp},
+        overlay=["extended_price", "discount", "suppkey"],
+        k=8,
+        rules=["dc_rpd", "fd_rs"],
+    )
+
+
+DC_RULE = DC(
+    "dc_rpd",
+    [Atom("region", "==", "region"),
+     Atom("extended_price", "<", "extended_price"),
+     Atom("discount", ">", "discount")],
+)
+FD_RULE = FD("fd_rs", "orderkey", "suppkey")
+
+
+def _timed(fn, repeats: int = 1):
+    out = fn()  # warm the jit caches before timing
+    jax.block_until_ready(out[0] if isinstance(out, tuple) else out)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn()
+        jax.block_until_ready(out[0] if isinstance(out, tuple) else out)
+    return out, (time.perf_counter() - t0) / repeats
+
+
+def run(quick: bool = False):
+    n = 2048 if quick else 16384
+    shard_counts = [2, 4] if quick else [2, 4, 8, 16]
+    strip_rows = 256
+    block = 256
+    rel = build(n, n_regions=max(n // 32, 8))
+    mesh = one_device_mesh()
+
+    (dense_dc, dt_dense) = _timed(
+        lambda: detect_dc(rel, DC_RULE, rel.valid, rel.valid, block=block)
+    )
+    (dense_fd, dt_dense_fd) = _timed(
+        lambda: detect_fd(rel, FD_RULE, rel.valid, k=8)
+    )
+    dense_pairs = int(rel.capacity) ** 2
+    rows = [["dense", 1, dense_pairs, 1.0, round(dt_dense, 4),
+             round(dt_dense_fd, 4), 0]]
+
+    prev_pairs = dense_pairs
+    for shards in shard_counts:
+        (res, dt_dc) = _timed(
+            lambda s=shards: detect_dc_sharded_info(
+                rel, DC_RULE, rel.valid, rel.valid, mesh,
+                n_shards=s, block=block, strip_rows=strip_rows,
+            )
+        )
+        det, info = res
+        (res_fd, dt_fd) = _timed(
+            lambda s=shards: detect_fd_sharded_info(
+                rel, FD_RULE, rel.valid, mesh, k=8, n_shards=s,
+                strip_rows=strip_rows,
+            )
+        )
+        det_fd, _ = res_fd
+
+        # gate 1: bit-identical to the dense scans, row for row
+        np.testing.assert_array_equal(
+            np.asarray(det.t1_count), np.asarray(dense_dc.t1_count)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(det.t2_count), np.asarray(dense_dc.t2_count)
+        )
+        for got, want in zip(det.t1_stat, dense_dc.t1_stat):
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        np.testing.assert_array_equal(
+            np.asarray(det_fd.violated), np.asarray(dense_fd.violated)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(det_fd.rhs_cand), np.asarray(dense_fd.rhs_cand)
+        )
+
+        # gate 2: strictly smaller comparison space, shrinking with shards
+        assert info.sharded_pairs < dense_pairs, (
+            f"{shards} shards did not shrink the pair space "
+            f"({info.sharded_pairs} vs {dense_pairs})"
+        )
+        assert info.sharded_pairs <= prev_pairs, (
+            f"pair space grew from {prev_pairs} at {shards} shards"
+        )
+        prev_pairs = info.sharded_pairs
+
+        # gate 3: per-shard strip coverage reported and plausible
+        assert info.per_shard_strips is not None
+        assert sum(info.per_shard_strips) >= -(-info.routed_rows // strip_rows)
+
+        rows.append([
+            "sharded", shards, info.sharded_pairs,
+            round(dense_pairs / max(info.sharded_pairs, 1), 2),
+            round(dt_dc, 4), round(dt_fd, 4),
+            max(info.per_shard_strips),
+        ])
+        print(
+            f"fig_dist_detect: {shards:>2} shards — pairs {info.sharded_pairs}"
+            f" ({dense_pairs / max(info.sharded_pairs, 1):.1f}x fewer), "
+            f"dc {dt_dc*1e3:.1f} ms, fd {dt_fd*1e3:.1f} ms, "
+            f"max strips/shard {max(info.per_shard_strips)}"
+        )
+
+    print(
+        f"fig_dist_detect: dense {dense_pairs} pairs in {dt_dense*1e3:.1f} ms; "
+        f"sharded bit-identical at every shard count"
+    )
+    return write_csv(
+        "fig_dist_detect",
+        ["variant", "shards", "pairs", "pair_savings_x",
+         "dc_seconds", "fd_seconds", "max_strips_per_shard"],
+        rows,
+    )
+
+
+if __name__ == "__main__":
+    run()

@@ -21,6 +21,7 @@ from benchmarks import (
     fig11_violation_scaling,
     fig12_dc_inequality,
     fig13_join_queries,
+    fig_dist_detect,
     serve_bg_warmup,
     serve_throughput,
     table5_accuracy,
@@ -35,6 +36,7 @@ MODULES = [
     ("fig11", fig11_violation_scaling),
     ("fig12", fig12_dc_inequality),
     ("fig13", fig13_join_queries),
+    ("fig_dist", fig_dist_detect),
     ("serve", serve_throughput),
     ("serve_bg", serve_bg_warmup),
     ("table5", table5_accuracy),

@@ -16,7 +16,8 @@ which makes the bit-identity gate exact for EVERY answer, not just at
 steady state, regardless of how background increments interleave with
 foreground queries (the §10 soundness argument, testable form).
 
-Acceptance gates (ISSUE 4, enforced here and smoked in CI):
+Acceptance gates (ISSUE 4 + the ISSUE 5 partial-reuse gate, enforced here
+and smoked in CI):
 
 * every answer bit-identical (canonical signatures, reusing
   ``serve_throughput.signature``) across service, service+bg, and the
@@ -26,7 +27,12 @@ Acceptance gates (ISSUE 4, enforced here and smoked in CI):
   workload — with the saved work showing up in the background
   attribution instead;
 * both variants reach a final cycle that pays zero foreground detect
-  work, and service+bg serves it entirely from the cache.
+  work, and service+bg serves it entirely from the cache;
+* **partial-work reuse** (DESIGN.md §11): a foreground DC full clean on a
+  scope the background cleaner has HALF cleaned (strip increments) scans
+  strictly fewer detect pairs than the same query on a cold scope, at a
+  bit-identical answer — the work-ledger gate that the old all-or-nothing
+  ``mark_checked`` could not pass.
 """
 
 from __future__ import annotations
@@ -37,7 +43,7 @@ import numpy as np
 
 from benchmarks.common import write_csv
 from benchmarks.serve_throughput import signature
-from repro.core.constraints import FD
+from repro.core.constraints import DC, FD, Atom
 from repro.core.executor import Daisy, DaisyConfig
 from repro.core.operators import Pred, Query
 from repro.core.relation import make_relation
@@ -126,6 +132,70 @@ def run_service(db, cfg, cycle_queries, idle_increments: int, increment_rows: in
     return sigs, server, per_cycle
 
 
+def dc_partial_reuse_gate(n: int, seed: int = 17):
+    """The §11 gate: strip-incremental background progress makes a
+    foreground full DC clean strictly cheaper (detect pairs) than on a
+    cold scope, with bit-identical answers and final candidate state."""
+    rng = np.random.default_rng(seed)
+
+    def build_dc():
+        price = rng.uniform(0.0, 100.0, n).astype(np.float32)
+        disc = (100.0 - price + rng.normal(0, 5.0, n)).astype(np.float32)
+        return make_relation(
+            {"price": price, "disc": disc}, overlay=["price", "disc"],
+            k=8, rules=["pd"],
+        )
+
+    dc = DC("pd", [Atom("price", "<", "price"), Atom("disc", ">", "disc")])
+    # accuracy_threshold=2.0: every auto DC step resolves to a full clean,
+    # so both variants run the SAME plan and only the ledger state differs
+    cfg = lambda: DaisyConfig(  # noqa: E731 — local config factory
+        use_cost_model=False, accuracy_threshold=2.0,
+        dc_block=max(n // 8, 8), strip_rows=max(n // 8, 8), dc_partitions=4,
+    )
+    state = rng.bit_generator.state
+    cold = Daisy({"t": build_dc()}, {"t": [dc]}, cfg())
+    rng.bit_generator.state = state
+    half = Daisy({"t": build_dc()}, {"t": [dc]}, cfg())
+
+    # background-clean HALF the strips of the half variant
+    scope = half.ledger.scope("t", "pd")
+    total = len(scope.cold_strips())
+    done = 0
+    while len(scope.cold_strips()) > total - total // 2:
+        assert half.clean_scope_increment("t", "pd", max_strips=1) is not None
+        done += 1
+    q = Query("t", preds=(Pred("price", ">=", 0.0),))
+    pairs = {}
+    masks = {}
+    for name, daisy in (("cold", cold), ("half-cleaned", half)):
+        p0 = daisy.detect_pairs
+        res = daisy.execute(q)
+        pairs[name] = daisy.detect_pairs - p0
+        masks[name] = np.asarray(res.mask)
+        assert res.report.steps[0].mode == "full", res.report.steps[0]
+    assert pairs["half-cleaned"] < pairs["cold"], (
+        f"half-cleaned scope did not reuse background strips "
+        f"({pairs['half-cleaned']} vs {pairs['cold']} pairs)"
+    )
+    np.testing.assert_array_equal(masks["cold"], masks["half-cleaned"])
+    for attr in ("price", "disc"):
+        np.testing.assert_array_equal(
+            np.asarray(cold.db["t"].cand[attr]),
+            np.asarray(half.db["t"].cand[attr]),
+        )
+        np.testing.assert_array_equal(
+            np.asarray(cold.db["t"].ccount[attr]),
+            np.asarray(half.db["t"].ccount[attr]),
+        )
+    print(
+        f"serve_bg_warmup partial-reuse: {done} background strip increments "
+        f"-> foreground full clean {pairs['cold']} -> "
+        f"{pairs['half-cleaned']} detect pairs, answers bit-identical"
+    )
+    return pairs
+
+
 def run(quick: bool = False):
     n = 480 if quick else 3840
     groups = 24 if quick else 64
@@ -156,12 +226,16 @@ def run(quick: bool = False):
                 [variant, pc["cycle"], pc["views"], pc["fg_detect"], pc["hits"],
                  snap["background"]["increments"], round(dt, 3)]
             )
+        warm = " ".join(
+            f"{scope}={p['strips_done']}/{p['strips_total']}"
+            for scope, p in snap["ledger"].items()
+        )
         print(
             f"serve_bg_warmup {variant}: {n_queries} queries in {dt:.2f}s — "
             f"fg detect {snap['detect_calls']}, bg detect "
             f"{snap['background']['detect_calls']} "
             f"({snap['background']['increments']} increments), "
-            f"hit rate {snap['hit_rate']:.0%}"
+            f"hit rate {snap['hit_rate']:.0%}, warmup [{warm}]"
         )
 
     sigs_svc, snap_svc, cyc_svc = results["service"]
@@ -187,6 +261,9 @@ def run(quick: bool = False):
     assert cyc_bg[-1]["hits"] == cyc_bg[-1]["views"], (
         "service+bg last cycle not fully cache-served"
     )
+
+    # gate 4 (ISSUE 5): strip-level partial-work reuse on a DC scope
+    dc_partial_reuse_gate(240 if quick else 1024)
 
     print(
         f"serve_bg_warmup: answers bit-identical; foreground detects "

@@ -67,14 +67,23 @@ print("per-session lineage:", [s["cached_answers"] for s in snap["sessions"]],
       "answers from cache")
 
 # idle window: the background cleaner warms the zip=10001 cluster nobody
-# queried, so its first-touch query skips the cleaning steps entirely
-cleaner = BackgroundCleaner(daisy, server=server, increment_rows=8)
+# queried, so its first-touch query skips the cleaning steps entirely.
+# increment_rows bounds one FD increment (whole lhs groups);
+# increment_strips is the DC analogue — work-ledger strips per increment
+# (DESIGN.md §11) — unused by this FD-only table but the knob to reach
+# for when a DC scope must background-clean with bounded pauses.
+cleaner = BackgroundCleaner(daisy, server=server, increment_rows=8,
+                            increment_strips=1)
 increments = cleaner.drain()
 d0 = server.metrics.detect_calls
 t = server.submit(analysts[0], ny_zip)
 server.drain()
-bg = server.snapshot()["background"]
+snap = server.snapshot()
+bg = snap["background"]
 print(f"background: {increments} increments ({bg['detect_calls']} detects), "
       f"then first-touch zip=10001 served with "
       f"{server.metrics.detect_calls - d0} foreground detects "
       f"(rows {np.flatnonzero(np.asarray(t.result.mask)).tolist()})")
+print("warmup progress:",
+      {scope: f"{p['strips_done']}/{p['strips_total']} strips"
+       for scope, p in snap["ledger"].items()})

@@ -18,7 +18,7 @@ dry-run lowers against them (the shannon/kernels pattern).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -8,6 +8,7 @@ from repro.core.constraints import DC, FD, Atom, fd_as_dc, overlaps_query
 from repro.core.cost import CostModel
 from repro.core.detect import detect_dc, detect_fd
 from repro.core.executor import Daisy, DaisyConfig, DaisyResult
+from repro.core.ledger import StripLedger, WorkLedger
 from repro.core.offline import OfflineCleaner
 from repro.core.operators import GroupBySpec, JoinClause, Pred, Query, filter_mask
 from repro.core.planner import plan_query
@@ -32,6 +33,8 @@ __all__ = [
     "Pred",
     "Query",
     "Relation",
+    "StripLedger",
+    "WorkLedger",
     "apply_candidates",
     "detect_dc",
     "detect_fd",

@@ -127,10 +127,21 @@ class CostModel:
     # observed full-detect cost on the sharded path (DESIGN.md §8/§10):
     # None until the executor has seen a ShardedDetectInfo for this rule
     df_observed: Optional[float] = None
+    # ledger strip coverage (DESIGN.md §11): fraction of the scope's strips
+    # still cold, fed by the executor at every commit.  None until observed;
+    # with it, the remaining-full-clean price shrinks as strips complete —
+    # foreground OR background — so the Inequality-(1) flip can fire
+    # mid-scope instead of waiting on query-coverage estimates.
+    cold_fraction: Optional[float] = None
 
     # -------------------------------------------------------------- records
     def record(self, q_i: int, e_i: int, d_i: float, eps_i: int) -> None:
         self.history.append(QueryCost(q_i, e_i, d_i, eps_i))
+
+    def observe_progress(self, cold_fraction: float) -> None:
+        """Record the ledger's current cold-strip fraction for this scope
+        (the executor calls this from every ``_mark`` commit)."""
+        self.cold_fraction = min(max(float(cold_fraction), 0.0), 1.0)
 
     def observe_detect_cost(self, cost: float) -> None:
         """Record an observed full-detect cost (e.g. ``sharded_detect_cost``
@@ -232,14 +243,19 @@ class CostModel:
 
     def remaining_full_clean_cost(self) -> float:
         """Cleaning the REST of the dataset now (what the switch buys):
-        detection over unseen rows + repair of remaining errors + update."""
+        detection over the still-cold part + repair of remaining errors +
+        update.  The cold part is the ledger's strip-coverage fraction when
+        observed (DESIGN.md §11) — query-coverage row sums double-count
+        revisited rows, the ledger does not — else the row-sum estimate."""
         unseen = max(self.n - self.seen_rows, 0)
         eps_left = max(self.epsilon - self.repaired_errors, 0)
         frac = unseen / max(self.n, 1)
+        if self.cold_fraction is not None:
+            frac = min(frac, self.cold_fraction)
         return (
             frac * self.df_effective
-            + eps_left * unseen / max(self.n, 1) * self.p
-            + unseen
+            + eps_left * frac * self.p
+            + frac * self.n
         )
 
     # -------------------------------------------------------------- decision

@@ -25,7 +25,7 @@ routed through ``dist.shuffle.shuffle_by_key`` and scanned per shard.
 
 from __future__ import annotations
 
-from typing import NamedTuple, Sequence, Tuple
+from typing import NamedTuple, Tuple
 
 import jax.numpy as jnp
 
@@ -99,9 +99,15 @@ def detect_dc(
     row_scope: jnp.ndarray,
     col_scope: jnp.ndarray,
     block: int = 256,
+    row_blocks: Tuple[int, int] | None = None,
 ) -> DCDetectResult:
     """Detect DC violations between ``row_scope`` rows (role t1) and
     ``col_scope`` rows (role t2), both directions.
+
+    ``row_blocks=(lo, hi)`` is the partition-strip entry (DESIGN.md §11):
+    only the row blocks of that strip are launched — the executor passes the
+    covering block range of the strips a ledger-driven step scans, so a
+    strip increment pays ``strip x n`` tile work instead of ``n x n``.
     """
     row_scope = row_scope & rel.valid
     col_scope = col_scope & rel.valid
@@ -112,14 +118,16 @@ def detect_dc(
 
     # role t1: rows are t1, partners t2 in col_scope; stat over partner r.
     t1_count, t1_stat = kops.dc_role_scan(
-        l_cols, r_cols, ops, row_scope, col_scope, reduces, block=block
+        l_cols, r_cols, ops, row_scope, col_scope, reduces, block=block,
+        row_blocks=row_blocks,
     )
     # role t2: rows are t2 — atom becomes row.r flip(op) col.l; stat over
     # partner l with the same reduce orientation seen from the row's side.
     flipped = [flip_op(op) for op in ops]
     t2_reduces = [_T1_REDUCE[op] for op in flipped]
     t2_count, t2_stat = kops.dc_role_scan(
-        r_cols, l_cols, flipped, row_scope, col_scope, t2_reduces, block=block
+        r_cols, l_cols, flipped, row_scope, col_scope, t2_reduces, block=block,
+        row_blocks=row_blocks,
     )
     return DCDetectResult(t1_count, t2_count, tuple(t1_stat), tuple(t2_stat))
 
@@ -158,19 +166,31 @@ def detect_dc_auto_info(
     block: int = 256,
     mesh=None,
     n_shards: int | None = None,
+    row_blocks: Tuple[int, int] | None = None,
+    strip_rows: int | None = None,
 ):
     """``detect_dc`` with sharded dispatch, returning ``(result, info)``
     where ``info`` is the ``ShardedDetectInfo`` of the routing (per-shard
     row counts, retry history) when the sharded path ran, else ``None`` —
     the executor feeds it to the cost model so the full/partial decision
-    prices the shuffle path (DESIGN.md §10)."""
+    prices the shuffle path (DESIGN.md §10).
+
+    ``row_blocks`` strip-scopes the DENSE scan only (the sharded path
+    re-routes rows, so strip locality does not survive the shuffle; its
+    scopes already shrink to the strip's rows).  ``strip_rows`` is passed to
+    the sharded path for its per-shard strip-coverage report (DESIGN.md §11).
+    """
     if will_shard(dc, mesh, n_shards):
         from repro.dist.detect import detect_dc_sharded_info
 
         return detect_dc_sharded_info(
-            rel, dc, row_scope, col_scope, mesh, n_shards=n_shards, block=block
+            rel, dc, row_scope, col_scope, mesh, n_shards=n_shards, block=block,
+            strip_rows=strip_rows,
         )
-    return detect_dc(rel, dc, row_scope, col_scope, block=block), None
+    return (
+        detect_dc(rel, dc, row_scope, col_scope, block=block, row_blocks=row_blocks),
+        None,
+    )
 
 
 def detect_dc_auto(
@@ -199,13 +219,17 @@ def detect_fd_auto_info(
     k: int | None = None,
     mesh=None,
     n_shards: int | None = None,
+    strip_rows: int | None = None,
 ):
     """``detect_fd`` with sharded dispatch, returning ``(result, info)``
-    (``info`` as in ``detect_dc_auto_info``)."""
+    (``info`` as in ``detect_dc_auto_info``, including its ``strip_rows``
+    coverage-report plumbing)."""
     if will_shard(fd, mesh, n_shards):
         from repro.dist.detect import detect_fd_sharded_info
 
-        return detect_fd_sharded_info(rel, fd, scope, mesh, k=k, n_shards=n_shards)
+        return detect_fd_sharded_info(
+            rel, fd, scope, mesh, k=k, n_shards=n_shards, strip_rows=strip_rows
+        )
     return detect_fd(rel, fd, scope, k=k), None
 
 

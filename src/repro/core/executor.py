@@ -17,12 +17,20 @@
 
 The executor owns the database state: every query returns a result AND
 advances the gradually-cleaned probabilistic instance (§6).
+
+Cleaning progress — scope versions, per-strip coverage, cold-row counts,
+the Algorithm-2 support fraction — lives in ONE structure, the
+``core.ledger.WorkLedger`` (DESIGN.md §11): every commit path funnels
+through ``_apply``/``_mark``, which bump the ledger and refresh its
+per-strip cold counts, and every consumer (the planner's strip-pruned
+full cleans, the background cleaner's bounded DC increments, the service
+cache's version vectors, the metrics progress export) reads the same
+ledger instead of keeping its own notion of what is done.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import math
 import threading
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -33,10 +41,10 @@ from repro.core import stats as statsmod
 from repro.core.constraints import DC, FD
 from repro.core.cost import CostModel, sharded_detect_cost
 from repro.core.detect import detect_dc_auto_info, detect_fd, detect_fd_auto_info
+from repro.core.ledger import WorkLedger
 from repro.core.operators import (
     GroupBySpec,
     JoinState,
-    Pred,
     Query,
     dedupe_pairs,
     expected_value,
@@ -48,12 +56,12 @@ from repro.core.operators import (
 from repro.core.planner import (
     CleanStep,
     PlanInfo,
-    full_clean_step,
     plan_query,
     probe_step,
+    strip_step,
 )
 from repro.core.relax import relax_fd
-from repro.core.relation import CAND_VALUE, Relation
+from repro.core.relation import Relation
 from repro.core.repair import dc_repair_candidates, fd_repair_candidates
 from repro.core.update import apply_candidates, mark_checked, unchecked
 
@@ -77,17 +85,27 @@ class DaisyConfig:
     # to the dense scans, so this is purely an execution-strategy knob.
     mesh: Optional[object] = None
     detect_shards: Optional[int] = None
+    # work-ledger strip size (DESIGN.md §11): rows per partition strip, the
+    # grain background DC increments and partial-work reuse operate at.
+    # None -> one detect tile (dc_block); always rounded up to a whole
+    # number of tiles so strips align with the dc_pairs grid.
+    strip_rows: Optional[int] = None
 
 
 @dataclasses.dataclass
 class StepReport:
     rule: str
     table: str
-    mode: str  # incremental | full | skipped
+    mode: str  # incremental | full | strip | skipped
     detect_path: str = "dense"  # dense | sharded
     answer_size: int = 0
     extra: int = 0
     repaired: int = 0
+    # comparison-space size this step's detects scanned: rows x partners for
+    # DCs, scope rows for the FD group-by — the partial-work-reuse gauge
+    # (benchmarks/serve_bg_warmup.py gates that a half-cleaned scope costs
+    # strictly fewer pairs than a cold one, DESIGN.md §11)
+    detect_pairs: int = 0
     relax_iterations: int = 0
     relax_converged: bool = True
     alg2_accuracy: float = 1.0
@@ -133,26 +151,30 @@ class Daisy:
         self.config = config or DaisyConfig()
         self.stats: Dict[Tuple[str, str], object] = {}
         self.cost: Dict[Tuple[str, str], CostModel] = {}
-        self.checked_partitions: Dict[Tuple[str, str], int] = {}
         # serving hooks (DESIGN.md §9/§10): a monotone version counter bumped
         # on every candidate-merge / checked-bit commit (the service cache's
-        # invalidation signal) plus a per-(table, rule) scope version so the
-        # cache can invalidate exactly the queries a commit can affect,
-        # cumulative detect/repair invocation counters (the work the cache
-        # amortizes), the last observed sharded routing per rule (feeds the
-        # cost model and the background priority model), and a re-entrancy
-        # lock so concurrent sessions can share one executor without torn
-        # read-modify-writes of ``self.db``.
+        # invalidation signal), cumulative detect/repair invocation and
+        # pair counters (the work the cache amortizes), the last observed
+        # sharded routing per rule (feeds the cost model and the background
+        # priority model), and a re-entrancy lock so concurrent sessions can
+        # share one executor without torn read-modify-writes of ``self.db``.
+        # Per-scope versions and strip coverage live in the work ledger
+        # (DESIGN.md §11) — the executor bumps it on every commit.
         self._clean_version = 0
-        self._scope_versions: Dict[Tuple[str, str], int] = {
-            (t, r.name): 0 for t, rs in self.rules.items() for r in rs
-        }
         self.sharded_info: Dict[Tuple[str, str], object] = {}
         self.detect_calls = 0
         self.repair_calls = 0
+        self.detect_pairs = 0
         self._lock = threading.RLock()
+        self.ledger = WorkLedger(self.config.strip_rows, self.config.dc_block)
         if self.config.collect_stats:
             self._collect_stats()
+        for table, rs in self.rules.items():
+            for rule in rs:
+                self.ledger.register(
+                    table, rule.name, self.db[table].capacity,
+                    np.asarray(self.cold_rows(table, rule.name)),
+                )
 
     @property
     def clean_version(self) -> int:
@@ -174,31 +196,37 @@ class Daisy:
         """Monotone per-(table, rule) version: bumped exactly when a commit
         for THAT rule advances the instance.  Equal scope versions over a
         query's overlapping rules imply a bit-identical answer (DESIGN.md
-        §10) — the refinement the service cache keys on so background
-        cleaning of one rule never invalidates another rule's entries."""
-        return self._scope_versions.get((table, rule_name), 0)
+        §10/§11) — the refinement the service cache keys on so background
+        cleaning of one rule never invalidates another rule's entries.
+        Backed by the work ledger."""
+        return self.ledger.version(table, rule_name)
 
     def scope_versions(self, deps: Sequence[Tuple[str, str]]) -> Tuple[int, ...]:
         """Version vector over a dependency list of (table, rule) pairs (the
         service cache's key half; read under ``lock`` when a background
         cleaner may be committing concurrently)."""
-        return tuple(self._scope_versions.get(d, 0) for d in deps)
+        return self.ledger.versions(deps)
 
     def _apply(self, rel: Relation, deltas, table: str, rule_name: str) -> Relation:
         """``apply_candidates`` + version bumps (every overlay merge advances
         the probabilistic instance globally and for the committing rule)."""
         self._clean_version += 1
-        key = (table, rule_name)
-        self._scope_versions[key] = self._scope_versions.get(key, 0) + 1
+        self.ledger.bump(table, rule_name)
         return apply_candidates(rel, deltas)
 
     def _mark(self, rel: Relation, table: str, rule_name: str, scope) -> Relation:
-        """``mark_checked`` + version bumps (checked bits steer future
-        cleaning, so they are part of the versioned state)."""
+        """``mark_checked`` + version bump + ledger coverage refresh: checked
+        bits steer future cleaning, so they are part of the versioned state,
+        and they are exactly what moves strip coverage (DESIGN.md §11)."""
         self._clean_version += 1
-        key = (table, rule_name)
-        self._scope_versions[key] = self._scope_versions.get(key, 0) + 1
-        return mark_checked(rel, rule_name, scope)
+        rel = mark_checked(rel, rule_name, scope)
+        self.ledger.commit(
+            table, rule_name, np.asarray(self._cold_mask(rel, table, rule_name))
+        )
+        cm = self.cost.get((table, rule_name))
+        if cm is not None:
+            cm.observe_progress(self.ledger.scope(table, rule_name).cold_fraction)
+        return rel
 
     # ------------------------------------------------------------ statistics
     def _collect_stats(self) -> None:
@@ -230,7 +258,6 @@ class Daisy:
                         df=df,
                         expected_queries=self.config.expected_queries,
                     )
-                self.checked_partitions[key] = 0
 
     # -------------------------------------------------------------- planning
     def _want_full(self) -> Dict[Tuple[str, str], bool]:
@@ -251,24 +278,38 @@ class Daisy:
                 return rule
         raise KeyError(f"no rule {rule_name!r} on table {table!r}")
 
-    def cold_rows(self, table: str, rule_name: str) -> jnp.ndarray:
-        """Rows a first-touch foreground query would still pay detect work
-        for: unchecked rows, intersected for FDs with the statically-known
-        dirty groups (clean groups skip via the Fig. 11 dirty-group gate
-        without ever being marked, so they are not background work either).
-        Read under ``lock`` if a cleaner may be committing concurrently."""
+    def _cold_mask(self, rel: Relation, table: str, rule_name: str) -> jnp.ndarray:
+        """Cold rows of ``rel`` for a rule: unchecked rows, intersected for
+        FDs with the statically-known dirty groups (clean groups skip via
+        the Fig. 11 dirty-group gate without ever being marked, so they are
+        not background work either).  The single definition the ledger's
+        per-strip counts are folded from (DESIGN.md §11)."""
         rule = self._rule_named(table, rule_name)
-        rel = self.db[table]
         cold = unchecked(rel, rule_name)
         st = self.stats.get((table, rule_name))
         if isinstance(rule, FD) and st is not None:
             cold = cold & jnp.asarray(st.dirty_row)
         return cold
 
+    def cold_rows(self, table: str, rule_name: str) -> jnp.ndarray:
+        """Rows a first-touch foreground query would still pay detect work
+        for (see ``_cold_mask``).  Read under ``lock`` if a cleaner may be
+        committing concurrently."""
+        return self._cold_mask(self.db[table], table, rule_name)
+
     def cold_count(self, table: str, rule_name: str) -> int:
-        """Host count of ``cold_rows`` (the background priority model's
-        cold-fraction input)."""
-        return int(np.asarray(jnp.sum(self.cold_rows(table, rule_name))))
+        """Host count of ``cold_rows`` — a ledger read (no device sync):
+        the per-strip counts are refreshed at every ``_mark`` commit.  A
+        scope the ledger has never sized (a rule appended to a live Daisy)
+        is registered from the real cold mask on first read."""
+        scope = self.ledger.scope(table, rule_name)
+        cap = self.db[table].capacity
+        if scope is None or scope.capacity < cap:
+            scope = self.ledger.register(
+                table, rule_name, cap,
+                np.asarray(self.cold_rows(table, rule_name)),
+            )
+        return scope.cold_count
 
     def _fd_increment_seed(
         self, rel: Relation, fd: FD, cold: jnp.ndarray, max_rows: Optional[int]
@@ -296,22 +337,30 @@ class Daisy:
         return jnp.asarray(valid & np.isin(gid, cold_groups))
 
     def clean_scope_increment(
-        self, table: str, rule_name: str, max_rows: Optional[int] = None
+        self,
+        table: str,
+        rule_name: str,
+        max_rows: Optional[int] = None,
+        max_strips: Optional[int] = None,
     ) -> Optional[StepReport]:
         """One preemptible background-cleaning increment for a rule scope
-        (DESIGN.md §10); returns its ``StepReport`` or ``None`` when the
+        (DESIGN.md §10/§11); returns its ``StepReport`` or ``None`` when the
         scope is already warm.
 
         Runs under ``lock`` and commits through the same ``_apply``/``_mark``
         path as foreground steps, so every increment bumps the global and
-        per-scope versions exactly like a query would.  FDs clean up to
-        ``max_rows`` cold rows per call, seeded on whole lhs groups and run
-        through the foreground incremental pipeline (relax closure, detect,
-        repair, mark) — by Lemma 4 the accumulated state is the one the same
-        sweeps issued as queries would reach.  DCs run the full-clean step
-        in one increment (the pairwise matrix has no cheaper sound cut), so
-        a DC increment's preemption latency is one full DC pass.
-        Cost-model histories are not polluted (``record_cost=False``)."""
+        per-scope ledger versions exactly like a query would.  FDs clean up
+        to ``max_rows`` cold rows per call, seeded on whole lhs groups and
+        run through the foreground incremental pipeline (relax closure,
+        detect, repair, mark) — by Lemma 4 the accumulated state is the one
+        the same sweeps issued as queries would reach.  DCs clean up to
+        ``max_strips`` ledger strips per call (strip x rest-of-dataset
+        scans through the strip-scoped kernel entry; ``None`` sweeps every
+        cold strip, i.e. the remaining full clean in one increment) — the
+        strip union is row-for-row identical to one full pass (DESIGN.md
+        §11), so a DC increment's preemption latency is now one strip scan,
+        exactly like the FD ``max_rows`` bound.  Cost-model histories are
+        not polluted (``record_cost=False``)."""
         with self._lock:
             rule = self._rule_named(table, rule_name)
             rel = self.db[table]
@@ -326,8 +375,17 @@ class Daisy:
                     answer_override=seed, record_cost=False,
                 )
             else:
+                # register-and-refresh from the cold mask just computed, so a
+                # rule appended to a live Daisy (lazily-created scope) hands
+                # the strip engine its real cold strips
+                scope = self.ledger.register(
+                    table, rule_name, rel.capacity, np.asarray(cold)
+                )
+                strips = scope.cold_strips()
+                if max_strips is not None:
+                    strips = strips[: max(int(max_strips), 1)]
                 self._clean_dc(
-                    full_clean_step(table, rule), report, record_cost=False
+                    strip_step(table, rule, strips), report, record_cost=False
                 )
             return report.steps[0] if report.steps else None
 
@@ -351,8 +409,21 @@ class Daisy:
         st = self.stats.get((table, fd.name))
         rep = StepReport(fd.name, table, step.mode)
 
+        mark_scope = None
         if step.mode == "full":
-            scope = rel.valid
+            # partial-work reuse (DESIGN.md §11): detect only lhs groups that
+            # still hold cold rows, taken whole (candidates are per-group
+            # evidence), instead of re-scanning groups earlier passes —
+            # foreground or background — already covered.  The mark still
+            # covers the whole relation: skipped groups are either fully
+            # checked already or statically clean (detection over them merges
+            # nothing), which is exactly what the unshrunk scan committed.
+            cold = self._cold_mask(rel, table, fd.name)
+            if bool(np.asarray(jnp.any(cold))):
+                scope = self._fd_increment_seed(rel, fd, cold, None)
+            else:
+                scope = rel.valid
+            mark_scope = rel.valid
             rep.answer_size = int(np.asarray(jnp.sum(scope)))
         else:
             answer = (
@@ -398,9 +469,12 @@ class Daisy:
             return
         mesh = self._detect_mesh(step)
         self.detect_calls += 1
+        rep.detect_pairs = int(np.asarray(jnp.sum(scope)))  # group-by is O(scope)
+        self.detect_pairs += rep.detect_pairs
         det, sinfo = detect_fd_auto_info(
             rel, fd, scope, k=self.config.k,
             mesh=mesh, n_shards=self.config.detect_shards,
+            strip_rows=self.ledger.strip_rows,
         )
         if sinfo is not None:
             rep.detect_path = "sharded"
@@ -409,7 +483,9 @@ class Daisy:
         deltas = fd_repair_candidates(rel, fd, det, repair_scope)
         rep.repaired = int(np.asarray(jnp.sum(det.violated & repair_scope)))
         rel = self._apply(rel, deltas, table, fd.name)
-        rel = self._mark(rel, table, fd.name, scope)
+        rel = self._mark(
+            rel, table, fd.name, scope if mark_scope is None else mark_scope
+        )
         self.db[table] = rel
         if cm and record_cost:
             d_i = float(np.asarray(jnp.sum(scope)))
@@ -428,30 +504,83 @@ class Daisy:
             cm.observe_detect_cost(sharded_detect_cost(info, n_rows=cm.n))
 
     # ------------------------------------------------------------- DC steps
+    def _dc_detect_repair(
+        self, rel, dc, row_scope, col_scope, row_blocks, mesh, cm, rep
+    ):
+        """One detect + repair-candidate pass of the DC increment engine:
+        scan ``row_scope x col_scope`` (strip-scoped to ``row_blocks`` when
+        given), merge the role fixes for ``row_scope`` rows, account the
+        scanned comparison space.  Returns ``(rel, detect_result)``."""
+        table = rep.table
+        self.detect_calls += 1
+        rows = int(np.asarray(jnp.sum(row_scope & rel.valid)))
+        cols = int(np.asarray(jnp.sum(col_scope & rel.valid)))
+        rep.detect_pairs += rows * cols
+        self.detect_pairs += rows * cols
+        det, sinfo = detect_dc_auto_info(
+            rel, dc, row_scope, col_scope, block=self.config.dc_block,
+            mesh=mesh, n_shards=self.config.detect_shards,
+            row_blocks=row_blocks, strip_rows=self.ledger.strip_rows,
+        )
+        if sinfo is not None:
+            rep.detect_path = "sharded"
+            self._observe_sharded(table, dc.name, sinfo, cm)
+        self.repair_calls += 1
+        deltas = dc_repair_candidates(rel, dc, det, row_scope, k=self.config.k)
+        rel = self._apply(rel, deltas, table, dc.name)
+        return rel, det
+
+    def _covering_blocks(self, mask) -> Optional[Tuple[int, int]]:
+        """Covering kernel-grid block range of a row mask's nonzero extent
+        (None for an empty mask) — strip-scopes answer-shaped scans."""
+        idx = np.flatnonzero(np.asarray(mask))
+        if idx.size == 0:
+            return None
+        block = self.config.dc_block
+        return int(idx[0]) // block, int(idx[-1]) // block + 1
+
     def _clean_dc(
         self, step: CleanStep, report: ExecReport, record_cost: bool = True
     ) -> None:
-        """One DC cleaning step (mode resolved by Algorithm 2 when 'auto').
-        ``record_cost=False`` keeps background full cleans out of the
-        per-query cost-model history (they still mark the rule switched:
-        after one, nothing is left for the switch to buy)."""
+        """One DC cleaning step through the strip-grained increment engine
+        (DESIGN.md §11).  Modes:
+
+        * ``auto`` — Algorithm 2 resolves full vs incremental at execution
+          time; its support input is the ledger's strip-coverage fraction;
+        * ``incremental`` — the answer's matrix strip [answer x rest] plus
+          the partner strip [rest x answer] (§4.2);
+        * ``full`` — the REMAINING cold strips x the whole dataset: strips
+          earlier passes (foreground or background) covered are skipped,
+          both in the scope mask and in the kernel grid (partial-work
+          reuse, the §11 refinement of the all-or-nothing full pass — and
+          what makes a full clean after background progress merge each
+          row's evidence exactly once);
+        * ``strip`` — an explicit cold-strip subset (``step.strips``): the
+          background cleaner's bounded-latency increment.  A strip sweep
+          that covers every cold strip IS the remaining full clean and is
+          reported as mode ``full``.
+
+        ``record_cost=False`` keeps background work out of the per-query
+        cost-model history (a scope-completing sweep still marks the rule
+        switched: after it, nothing is left for the switch to buy)."""
         table, dc = step.table, step.rule
         rel = self.db[table]
         key = (table, dc.name)
         cm = self.cost.get(key)
         st: statsmod.DCStats = self.stats.get(key)
+        scope_ledger = self.ledger.register(table, dc.name, rel.capacity)
         rep = StepReport(dc.name, table, step.mode)
 
         answer = filter_mask(rel, step.preds) if step.preds else rel.valid
-        rep.answer_size = int(np.asarray(jnp.sum(answer)))
         mode = step.mode
         if mode == "auto" and st is not None:
+            answer_size = int(np.asarray(jnp.sum(answer)))
             pivot_vals = np.asarray(rel.columns[st.pivot])[np.asarray(answer)]
             dec = statsmod.algorithm2_decide(
                 st,
                 pivot_vals,
-                rep.answer_size,
-                self.checked_partitions.get(key, 0),
+                answer_size,
+                scope_ledger.support,
                 self.config.accuracy_threshold,
             )
             rep.alg2_accuracy = dec.accuracy
@@ -459,83 +588,83 @@ class Daisy:
             mode = "full" if dec.full_clean else "incremental"
         elif mode == "auto":
             mode = "incremental"
-        rep.mode = mode
+
+        # resolve the scan scope: which rows of the comparison matrix this
+        # step owns, and the covering kernel block range (the strip grid)
+        live = unchecked(rel, dc.name)
+        cold_ids = scope_ledger.cold_strips()
+        cold_frac = scope_ledger.cold_fraction
+        row_blocks = None
+        if mode == "incremental":
+            row_scope = answer & live
+        else:
+            sel = cold_ids
+            if step.strips is not None:
+                # drop strips that raced warm since the step was planned
+                sel = np.intersect1d(
+                    np.asarray(step.strips, dtype=np.int64), cold_ids
+                )
+            if mode == "strip" and len(sel) < len(cold_ids):
+                rep.mode = "strip"
+            else:
+                mode = "full"  # covers every cold strip == remaining full clean
+            if len(sel):
+                row_scope = jnp.asarray(scope_ledger.strip_mask(sel)) & live
+                row_blocks = scope_ledger.strip_blocks(sel, self.config.dc_block)
+            else:
+                row_scope = jnp.zeros_like(rel.valid)
+        rep.mode = mode if mode != "strip" else rep.mode
+        rep.answer_size = int(np.asarray(jnp.sum(row_scope if mode == "strip" else answer)))
 
         # idempotence gate (the DC analogue of the FD dirty-group skip): when
         # everything this step would scope is already checked for the rule,
-        # the query that checked it also repaired its DC partners, so
+        # the pass that checked it also merged its DC evidence, so
         # re-detecting would only re-merge the same evidence — double-counting
         # candidate support and advancing clean_version for no state change.
         # Repeated queries therefore skip, keeping answers version-stable
         # (the service cache's contract, DESIGN.md §9).
-        live = unchecked(rel, dc.name)
-        if mode != "full":
-            live = live & answer
-        if not bool(np.asarray(jnp.any(live))):
+        if not bool(np.asarray(jnp.any(row_scope))):
             rep.mode = "skipped"
             report.steps.append(rep)
             if cm and record_cost:
                 cm.record(rep.answer_size, 0, 0.0, 0)
             return
 
-        if mode == "full":
-            row_scope = rel.valid
-            col_scope = rel.valid
-        else:
-            row_scope = answer & unchecked(rel, dc.name)
-            col_scope = rel.valid
-
         mesh = self._detect_mesh(step)
-        self.detect_calls += 1
-        det, sinfo = detect_dc_auto_info(
-            rel, dc, row_scope, col_scope, block=self.config.dc_block,
-            mesh=mesh, n_shards=self.config.detect_shards,
+        col_scope = rel.valid
+        if mode == "incremental":
+            row_blocks = self._covering_blocks(row_scope)
+        rel, det = self._dc_detect_repair(
+            rel, dc, row_scope, col_scope, row_blocks, mesh, cm, rep
         )
-        if sinfo is not None:
-            rep.detect_path = "sharded"
-            self._observe_sharded(table, dc.name, sinfo, cm)
-        self.repair_calls += 1
-        deltas = dc_repair_candidates(rel, dc, det, row_scope, k=self.config.k)
         repaired = (det.t1_count > 0) | (det.t2_count > 0)
         rep.repaired = int(np.asarray(jnp.sum(repaired & row_scope)))
-        rel = self._apply(rel, deltas, table, dc.name)
 
         if mode == "incremental":
-            # partners of the answer (the DC-correlated tuples, §4.2) get their
-            # role fixes too — the incremental matrix strip [rest x answer].
+            # partners of the answer (the DC-correlated tuples, §4.2) get
+            # their role fixes too — the incremental matrix strip
+            # [rest x answer].
             partner_scope = rel.valid & ~answer
-            self.detect_calls += 1
-            det2, sinfo2 = detect_dc_auto_info(
-                rel, dc, partner_scope, answer, block=self.config.dc_block,
-                mesh=mesh, n_shards=self.config.detect_shards,
+            rel, det2 = self._dc_detect_repair(
+                rel, dc, partner_scope, answer, None, mesh, cm, rep
             )
-            if sinfo2 is not None:
-                self._observe_sharded(table, dc.name, sinfo2, cm)
-            self.repair_calls += 1
-            deltas2 = dc_repair_candidates(rel, dc, det2, partner_scope, k=self.config.k)
-            rel = self._apply(rel, deltas2, table, dc.name)
             rep.extra = int(
-                np.asarray(jnp.sum(((det2.t1_count > 0) | (det2.t2_count > 0)) & partner_scope))
+                np.asarray(
+                    jnp.sum(((det2.t1_count > 0) | (det2.t2_count > 0)) & partner_scope)
+                )
             )
 
-        rel = self._mark(
-            rel, table, dc.name, row_scope if mode != "full" else rel.valid
-        )
+        rel = self._mark(rel, table, dc.name, row_scope)
         self.db[table] = rel
-        # support bookkeeping: diagonal partitions covered by this query
-        p = self.config.dc_partitions
-        sq = int(math.isqrt(p))
-        covered = sq if mode != "full" else sq * (sq + 1) // 2
-        self.checked_partitions[key] = self.checked_partitions.get(key, 0) + covered
         if cm and record_cost:
             n = cm.n
             d_i = (
-                float(rep.answer_size) * n / max(p, 1)
-                if mode != "full"
-                else cm.df_effective
+                float(rep.answer_size) * n / max(self.config.dc_partitions, 1)
+                if mode == "incremental"
+                else cm.df_effective * cold_frac
             )
             cm.record(rep.answer_size, rep.extra, d_i, rep.repaired)
-        if cm and mode == "full":
+        if cm and rep.mode == "full":
             cm.mark_switched()
         report.steps.append(rep)
 
@@ -556,6 +685,7 @@ class Daisy:
             plan = plan_query(
                 query, self.rules, self._want_full(),
                 lemma1_fast_path=self.config.lemma1_fast_path,
+                ledger=self.ledger,
             )
             report = ExecReport(notes=list(plan.notes))
 
@@ -581,7 +711,6 @@ class Daisy:
 
     # --------------------------------------------------------- join queries
     def _execute_join(self, query: Query, plan: PlanInfo, report: ExecReport) -> DaisyResult:
-        cfg = self.config
         # pre-clean qualifying masks (the dirty base join inputs)
         pre_masks: Dict[str, jnp.ndarray] = {
             query.table: filter_mask(self.db[query.table], query.preds)

@@ -1,0 +1,236 @@
+"""The per-(table, rule, partition-strip) work ledger (DESIGN.md §11).
+
+The paper's DC detection partitions the cartesian comparison matrix and
+prunes partitions by boundary ranges (§4.2); the ``dc_pairs`` kernel runs
+that plan as a 2-D grid of block tiles (DESIGN.md §7).  Cleaning
+*progress*, however, was tracked at whole-(table, rule) granularity —
+one monotone version plus an all-or-nothing cold test — so a background
+DC increment was one unpreemptible full pairwise pass and a foreground
+query could never reuse a half-cleaned scope.  The ledger replaces those
+ad-hoc mechanisms with one structure per (table, rule) scope:
+
+* the row space splits into **Okcan–Riedewald block-row strips** of
+  ``strip_rows`` rows, aligned to the kernel tile grid (``strip_rows`` is
+  a multiple of the detect block, so a strip is a whole number of grid
+  rows and a strip-scoped scan is a grid-row range, not a masked full
+  sweep);
+* every detect/repair commit reports the rows still cold (unchecked and,
+  for FDs, statically dirty); the ledger folds them into per-strip cold
+  counts, from which strip coverage, cold totals and the Algorithm-2
+  support fraction are all host-cheap reads;
+* the scope **version** — the service cache's invalidation coordinate
+  (DESIGN.md §9/§10) — lives here too: equal ledger vectors over a
+  query's dependency scopes imply bit-identical answers, because every
+  commit path bumps the ledger exactly when it advances the instance.
+
+Why ledger-equal ⇒ bit-identical (the §11 argument, short form): repairs
+merge into the candidate overlay, never into the base columns detection
+reads, and the Lemma-4 merge is commutative and associative over
+row-disjoint deltas.  A strip therefore contributes the same delta
+whenever it is cleaned, and "which strips have contributed" — exactly
+what the ledger tracks — determines the overlay state up to merge order,
+which the merge erases.
+
+Thread-safety: the ledger is NOT internally locked; every mutation and
+every read that must be consistent with the instance happens under the
+executor's lock (``Daisy.lock``), which is also what serializes the
+background cleaner against foreground queries.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+def resolve_strip_rows(strip_rows: Optional[int], block: int) -> int:
+    """Align the configured strip size to the detect tile grid: at least
+    one block, rounded up to a whole number of blocks (a strip must be a
+    contiguous run of kernel grid rows for the strip-scoped scan entry)."""
+    base = int(strip_rows) if strip_rows else int(block)
+    if base <= 0:
+        raise ValueError(f"strip_rows must be positive, got {strip_rows}")
+    return -(-base // int(block)) * int(block)
+
+
+@dataclasses.dataclass
+class StripLedger:
+    """Work ledger for ONE (table, rule) scope: per-strip cold-row counts
+    plus the scope's monotone version (see the module docstring for the
+    locking and soundness contracts)."""
+
+    table: str
+    rule: str
+    capacity: int
+    strip_rows: int
+    version: int = 0
+    cold_per_strip: np.ndarray = dataclasses.field(default=None)  # (n_strips,) int64
+
+    def __post_init__(self):
+        if self.cold_per_strip is None:
+            self.cold_per_strip = np.zeros(self.n_strips, dtype=np.int64)
+
+    # ------------------------------------------------------------- geometry
+    @property
+    def n_strips(self) -> int:
+        """Number of block-row strips covering the row space."""
+        return -(-self.capacity // self.strip_rows)
+
+    def strip_mask(self, strips: Sequence[int]) -> np.ndarray:
+        """Row mask (capacity,) selecting the given strips."""
+        mask = np.zeros(self.capacity, dtype=bool)
+        for s in strips:
+            mask[s * self.strip_rows : (s + 1) * self.strip_rows] = True
+        return mask
+
+    def strip_blocks(self, strips: Sequence[int], block: int) -> Tuple[int, int]:
+        """Covering kernel-grid block-row range [lo, hi) of the given strips
+        (the ``row_blocks`` argument of the strip-scoped detect entry).
+        ``strip_rows`` is block-aligned, so strip bounds are block bounds.
+
+        One contiguous range, not per-strip runs: warm strips inside the
+        range cost only grid iterations — their row blocks are fully
+        scoped out, so the kernel's scope-masked bound pruning gives them
+        identity bounds and ``@pl.when`` skips the tile body entirely
+        (DESIGN.md §7)."""
+        per = self.strip_rows // block
+        lo = min(strips) * per
+        hi = (max(strips) + 1) * per
+        return lo, min(hi, -(-self.capacity // block))
+
+    # ------------------------------------------------------------- progress
+    @property
+    def cold_count(self) -> int:
+        """Rows a first-touch foreground detect would still pay for."""
+        return int(self.cold_per_strip.sum())
+
+    @property
+    def strips_done(self) -> int:
+        """Strips with no cold rows left (fully covered for this rule)."""
+        return int((self.cold_per_strip == 0).sum())
+
+    @property
+    def support(self) -> float:
+        """Fraction of strips covered — the Algorithm-2 support input
+        (replaces the diagonal-partition bookkeeping, DESIGN.md §11)."""
+        return self.strips_done / max(self.n_strips, 1)
+
+    @property
+    def cold_fraction(self) -> float:
+        """Cold strips over total strips — prices the REMAINING full-clean
+        detection (``CostModel.remaining_full_clean_cost``)."""
+        return 1.0 - self.support
+
+    def cold_strips(self) -> np.ndarray:
+        """Ascending ids of strips that still hold cold rows."""
+        return np.flatnonzero(self.cold_per_strip > 0)
+
+    # -------------------------------------------------------------- commits
+    def bump(self) -> None:
+        """Advance the scope version (every instance-advancing commit)."""
+        self.version += 1
+
+    def observe_cold(self, cold: np.ndarray) -> None:
+        """Fold a fresh cold-row mask into per-strip counts.  ``cold`` is
+        the (capacity,) host bool mask of rows a foreground detect would
+        still scan; called under the executor lock at every commit."""
+        cold = np.asarray(cold, dtype=bool)
+        pad = self.n_strips * self.strip_rows - cold.shape[0]
+        if pad:
+            cold = np.pad(cold, (0, pad))
+        self.cold_per_strip = cold.reshape(self.n_strips, self.strip_rows).sum(
+            axis=1, dtype=np.int64
+        )
+
+
+class WorkLedger:
+    """All scopes' strip ledgers behind one lookup — the single progress
+    structure foreground cleaning, background cleaning and the service
+    cache key on (DESIGN.md §11).  Unknown scopes read as version 0 and
+    empty progress, mirroring the old version-dict semantics."""
+
+    def __init__(self, strip_rows: int, block: int):
+        self.strip_rows = resolve_strip_rows(strip_rows, block)
+        self.block = int(block)
+        self._scopes: Dict[Tuple[str, str], StripLedger] = {}
+
+    # ------------------------------------------------------------- registry
+    def register(self, table: str, rule: str, capacity: int,
+                 cold: Optional[np.ndarray] = None) -> StripLedger:
+        """Create (or return) the scope's strip ledger; ``cold`` seeds the
+        initial per-strip cold counts.  A scope first seen through a bare
+        version bump (capacity 0 — e.g. a rule appended to a live Daisy)
+        grows to the real capacity on its first sized registration; the
+        version is preserved, the strip grid re-derives."""
+        key = (table, rule)
+        scope = self._scopes.get(key)
+        if scope is None:
+            scope = StripLedger(table, rule, int(capacity), self.strip_rows)
+            self._scopes[key] = scope
+        elif int(capacity) > scope.capacity:
+            # growth without a cold mask seeds ALL-COLD, never all-warm: an
+            # unknown scope must read as work to do (a warm-seeded scope
+            # would skip every clean forever and serve dirty silently); the
+            # first checked-bit commit replaces the pessimistic counts with
+            # the real ones.
+            scope.capacity = int(capacity)
+            scope.cold_per_strip = np.full(
+                scope.n_strips, scope.strip_rows, dtype=np.int64
+            )
+        if cold is not None:
+            scope.observe_cold(cold)
+        return scope
+
+    def scope(self, table: str, rule: str) -> Optional[StripLedger]:
+        """The scope's ledger, or None when never registered."""
+        return self._scopes.get((table, rule))
+
+    def scopes(self) -> List[StripLedger]:
+        """Every registered scope ledger (stable registration order)."""
+        return list(self._scopes.values())
+
+    # ------------------------------------------------------------- versions
+    def version(self, table: str, rule: str) -> int:
+        """Monotone per-scope version (0 for unknown scopes)."""
+        scope = self._scopes.get((table, rule))
+        return 0 if scope is None else scope.version
+
+    def versions(self, deps: Sequence[Tuple[str, str]]) -> Tuple[int, ...]:
+        """Version vector over a dependency list — the service cache's key
+        half (read under the executor lock when a cleaner may commit)."""
+        return tuple(self.version(t, r) for t, r in deps)
+
+    def bump(self, table: str, rule: str) -> None:
+        """Advance one scope's version (auto-registers unknown scopes so a
+        commit can never be dropped from the vector)."""
+        self.register(table, rule, 0).bump()
+
+    def commit(self, table: str, rule: str, cold: np.ndarray) -> None:
+        """One instance-advancing commit that also refreshed coverage:
+        bump the version AND fold the new cold mask (checked-bit commits)."""
+        scope = self.register(table, rule, cold.shape[0])
+        scope.bump()
+        scope.observe_cold(cold)
+
+    # ------------------------------------------------------------- progress
+    def cold_count(self, table: str, rule: str) -> int:
+        scope = self._scopes.get((table, rule))
+        return 0 if scope is None else scope.cold_count
+
+    def support(self, table: str, rule: str) -> float:
+        scope = self._scopes.get((table, rule))
+        return 1.0 if scope is None else scope.support
+
+    def progress(self) -> Dict[str, Dict[str, int]]:
+        """JSON-serializable per-scope progress: strips done / total plus
+        remaining cold rows (exported by ``service.metrics`` snapshots)."""
+        return {
+            f"{s.table}/{s.rule}": {
+                "strips_done": s.strips_done,
+                "strips_total": s.n_strips,
+                "cold_rows": s.cold_count,
+            }
+            for s in self._scopes.values()
+        }

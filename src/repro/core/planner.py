@@ -41,6 +41,12 @@ class CleanStep:
     # sharded path when the executor runs on a mesh (DESIGN.md §8); the
     # executor combines this with its mesh config at execution time.
     shardable: bool = False
+    # partition-strip grain (DESIGN.md §11): when set, the step scans ONLY
+    # these ledger strips (DC row-block strips of the comparison matrix) —
+    # the background cleaner's bounded increments and the planner's
+    # ledger-pruned full cleans both express their scope this way.  None
+    # means the step is not strip-scoped (FD steps, answer-scoped DC steps).
+    strips: Tuple[int, ...] | None = None
 
 
 @dataclasses.dataclass
@@ -67,16 +73,6 @@ def _fd_use_rhs(fd: FD, preds: Sequence[Pred], lemma1_fast_path: bool) -> bool:
     return not (pred_attrs and pred_attrs <= {fd.rhs})
 
 
-def full_clean_step(table: str, rule) -> CleanStep:
-    """The plan step a cost-model full-clean switch would inject, usable
-    standalone: the background cleaner (DESIGN.md §10) runs DC scopes through
-    it so background work takes exactly the foreground full path — including
-    the ``shardable`` mark that lets detection route over the mesh."""
-    return CleanStep(
-        table, rule, "pre", "full", True, (), bool(equality_key_attrs(rule))
-    )
-
-
 def probe_step(table: str, rule) -> CleanStep:
     """An incremental step with no predicate filter: the executor substitutes
     an explicit answer mask (``answer_override``).  Background FD increments
@@ -89,14 +85,33 @@ def probe_step(table: str, rule) -> CleanStep:
     )
 
 
+def strip_step(table: str, rule, strips) -> CleanStep:
+    """A DC step scoped to a set of ledger strips (DESIGN.md §11): the
+    executor scans ``strips`` x rest-of-dataset and marks exactly the cold
+    rows it covered.  This is the background cleaner's bounded-latency DC
+    increment — and, with ALL cold strips passed, the ledger-pruned form of
+    the full clean (foreground full cleans route through it too, so both
+    paths are one increment engine)."""
+    return CleanStep(
+        table, rule, "pre", "strip", True, (),
+        bool(equality_key_attrs(rule)), tuple(int(s) for s in strips),
+    )
+
+
 def plan_query(
     query: Query,
     rules: Dict[str, Sequence[FD | DC]],
     want_full: Dict[Tuple[str, str], bool],
     lemma1_fast_path: bool = False,
+    ledger=None,
 ) -> PlanInfo:
     """Build the cleaning plan.  ``want_full[(table, rule)]`` carries the
-    cost model's current verdict (executor refreshes it before each query)."""
+    cost model's current verdict (executor refreshes it before each query).
+
+    With a ``WorkLedger`` passed, cost-model DC full cleans plan at strip
+    grain: the step carries the scope's cold strips, so the executor scans
+    only the part of the comparison matrix no earlier pass (foreground or
+    background) already covered — partial-work reuse, DESIGN.md §11."""
     steps: List[CleanStep] = []
     notes: List[str] = []
 
@@ -129,8 +144,19 @@ def plan_query(
                         notes.append(f"{rule.name}@{table}: Lemma-1 rhs-filter path")
             else:
                 mode = "full" if full else "auto"
+                strips = None
+                if full and ledger is not None:
+                    scope = ledger.scope(table, rule.name)
+                    if scope is not None and scope.strips_done > 0:
+                        strips = tuple(int(s) for s in scope.cold_strips())
+                        notes.append(
+                            f"{rule.name}@{table}: full clean pruned to "
+                            f"{len(strips)}/{scope.n_strips} cold strips"
+                        )
                 steps.append(
-                    CleanStep(table, rule, "post", mode, True, preds, shardable)
+                    CleanStep(
+                        table, rule, "post", mode, True, preds, shardable, strips
+                    )
                 )
                 if not shardable:
                     notes.append(

@@ -23,7 +23,6 @@ from __future__ import annotations
 
 from typing import NamedTuple, Sequence, Tuple
 
-import jax
 import jax.numpy as jnp
 
 from repro.core.constraints import DC, FD

@@ -16,9 +16,8 @@ from typing import List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core.relation import SENTINEL, masked_keys
+from repro.core.relation import masked_keys
 
 
 def _lex_sort(keys: Sequence[jnp.ndarray], payloads: Sequence[jnp.ndarray]):

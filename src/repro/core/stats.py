@@ -25,11 +25,8 @@ triggers the full clean.
 
 from __future__ import annotations
 
-import dataclasses
-import math
-from typing import Dict, NamedTuple, Sequence, Tuple
+from typing import NamedTuple
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.constraints import DC, FD
@@ -135,12 +132,16 @@ def algorithm2_decide(
     stats: DCStats,
     answer_values: np.ndarray,
     answer_size: int,
-    checked_partitions: int,
+    support: float,
     threshold: float,
 ) -> Alg2Decision:
     """Algorithm 2 lines 3-10: given a query answer over the pivot attribute,
-    estimate the accuracy of partial cleaning and decide full vs partial."""
-    p = len(stats.part_rows)
+    estimate the accuracy of partial cleaning and decide full vs partial.
+
+    ``support`` is the fraction of the scope's comparison space already
+    checked — since the work ledger (DESIGN.md §11), the caller passes its
+    strip-coverage fraction directly (strips done / total), replacing the
+    old diagonal-partition bookkeeping."""
     if answer_size == 0:
         return Alg2Decision(1.0, 1.0, 0.0, False)
     lo, hi = float(answer_values.min()), float(answer_values.max())
@@ -148,7 +149,5 @@ def algorithm2_decide(
     # errors from ranges OUTSIDE the answer's ranges (line 5: i != range)
     errors = float(stats.range_vio[~in_range].sum())
     accuracy = answer_size / (answer_size + errors) if (answer_size + errors) else 1.0
-    sq = int(math.isqrt(p))
-    total_diag = sq * (sq + 1) // 2
-    support = min(checked_partitions / max(total_diag, 1), 1.0)
+    support = min(max(float(support), 0.0), 1.0)
     return Alg2Decision(accuracy, support, errors, accuracy < threshold)

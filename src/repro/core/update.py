@@ -15,6 +15,7 @@ Overflow beyond the K overlay slots keeps the K heaviest candidates
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Sequence, Tuple
 
 import jax
@@ -47,9 +48,6 @@ def _dedupe_sum(values, counts, kinds):
                 jnp.where(same, 0.0, out_counts[:, j])
             )
     return out_counts
-
-
-import functools
 
 
 @functools.partial(jax.jit, static_argnums=(6,))

@@ -93,7 +93,6 @@ class CleanDataPipeline:
                 vals = np.asarray(rel.cand[p.col])
                 ok = _np_op(vals, p.op, p.value)
                 has = probs.sum(axis=1) > 0
-                m = np.where(has, (probs * ok).sum(axis=1), None)
                 base = _np_op(np.asarray(rel.columns[p.col]), p.op, p.value)
                 mass *= np.where(has, (probs * ok).sum(axis=1), base.astype(np.float32))
             else:

@@ -63,7 +63,8 @@ from repro.dist.shuffle import CAPACITY_FACTOR, shuffle_by_key
 @dataclasses.dataclass
 class ShardedDetectInfo:
     """What the routing actually did — consumed by launch/dryrun.py's
-    pair-count report and asserted on by the overflow-retry tests."""
+    pair-count report, the executor's cost model, and asserted on by the
+    overflow-retry tests."""
 
     n_shards: int
     capacity_factor: float  # the factor that finally fit
@@ -72,6 +73,12 @@ class ShardedDetectInfo:
     per_shard_rows: List[int]  # routed row count per shard
     dense_pairs: int  # cap^2 — the dense scan's comparison space
     sharded_pairs: int  # sum_s rows_s^2 — what the shards scanned
+    # distinct SOURCE ledger strips (DESIGN.md §11) each shard's routed rows
+    # came from, when the caller passed its strip size: how a key-routed
+    # shard's work maps back onto the work ledger's strip grid (the per-host
+    # work partition the sharded service will consume).  None when the
+    # caller did not report a strip size.
+    per_shard_strips: Optional[List[int]] = None
 
 
 def default_n_shards(mesh) -> int:
@@ -194,8 +201,19 @@ def _unroute(routed: jnp.ndarray, src: jnp.ndarray, valid: jnp.ndarray,
     return out.at[idx].set(flat, mode="drop")[:cap]
 
 
-def _info(res, n_shards, factor, retries, cap) -> ShardedDetectInfo:
+def _info(res, n_shards, factor, retries, cap,
+          strip_rows: Optional[int] = None) -> ShardedDetectInfo:
     per_shard = np.asarray(jnp.sum(res.valid.astype(jnp.int32), axis=1))
+    per_shard_strips = None
+    if strip_rows:
+        # distinct source strips per shard: the routed slots' original row
+        # indices (res.src), bucketed by the caller's ledger strip grid
+        src = np.asarray(res.src)
+        valid = np.asarray(res.valid)
+        per_shard_strips = [
+            len(np.unique(src[s][valid[s]] // int(strip_rows)))
+            for s in range(src.shape[0])
+        ]
     return ShardedDetectInfo(
         n_shards=n_shards,
         capacity_factor=factor,
@@ -204,6 +222,7 @@ def _info(res, n_shards, factor, retries, cap) -> ShardedDetectInfo:
         per_shard_rows=[int(c) for c in per_shard],
         dense_pairs=int(cap) ** 2,
         sharded_pairs=int((per_shard.astype(np.int64) ** 2).sum()),
+        per_shard_strips=per_shard_strips,
     )
 
 
@@ -233,9 +252,12 @@ def detect_dc_sharded_info(
     n_shards: Optional[int] = None,
     block: int = 256,
     capacity_factor: float = CAPACITY_FACTOR,
+    strip_rows: Optional[int] = None,
 ) -> Tuple[DCDetectResult, ShardedDetectInfo]:
     """Sharded ``detect_dc``: bit-identical to the dense scan for DCs with
-    at least one same-attribute equality atom.  Also returns routing info."""
+    at least one same-attribute equality atom.  Also returns routing info
+    (``strip_rows`` adds the per-shard source-strip coverage report,
+    DESIGN.md §11)."""
     key_attrs = equality_key_attrs(dc)
     if not key_attrs:
         raise ValueError(
@@ -302,7 +324,7 @@ def detect_dc_sharded_info(
         for s, n, red in zip(t2s, l_names, t2_red)
     )
     det = DCDetectResult(t1_count, t2_count, t1_stat, t2_stat)
-    return det, _info(res, n_shards, factor, retries, cap)
+    return det, _info(res, n_shards, factor, retries, cap, strip_rows=strip_rows)
 
 
 def detect_dc_sharded(
@@ -340,6 +362,7 @@ def _grouped_candidates_sharded(
     mesh,
     n_shards: int,
     capacity_factor: float,
+    strip_rows: Optional[int] = None,
 ):
     """Sharded ``group_distinct_candidates``: route rows by the group key so
     each group lives whole on one shard, group locally, un-route."""
@@ -361,7 +384,7 @@ def _grouped_candidates_sharded(
         _unroute(count, res.src, res.valid, cap, jnp.float32(0.0)),
         _unroute(violated, res.src, res.valid, cap, False),
         jnp.any(overflow),
-        _info(res, n_shards, factor, retries, cap),
+        _info(res, n_shards, factor, retries, cap, strip_rows=strip_rows),
     )
 
 
@@ -373,10 +396,12 @@ def detect_fd_sharded_info(
     k: Optional[int] = None,
     n_shards: Optional[int] = None,
     capacity_factor: float = CAPACITY_FACTOR,
+    strip_rows: Optional[int] = None,
 ) -> Tuple[FDDetectResult, ShardedDetectInfo]:
     """Sharded ``detect_fd``: lhs groups route whole onto one shard; the
     swapped P(lhs | rhs) grouping (single-attribute lhs) uses a second
-    routing pass keyed on the rhs.  Bit-identical to the dense path."""
+    routing pass keyed on the rhs.  Bit-identical to the dense path.
+    ``strip_rows`` adds the per-shard strip-coverage report (§11)."""
     k = k or max(rel.k, 2)
     n_shards = n_shards or default_n_shards(mesh)
     if n_shards < 2:
@@ -386,7 +411,8 @@ def detect_fd_sharded_info(
     rhs_col = rel.columns[fd.rhs]
 
     rhs_cand, rhs_count, violated, overflow, info = _grouped_candidates_sharded(
-        lhs_cols, rhs_col, scope, k, mesh, n_shards, capacity_factor
+        lhs_cols, rhs_col, scope, k, mesh, n_shards, capacity_factor,
+        strip_rows=strip_rows,
     )
     lhs_cand = lhs_count = None
     if len(fd.lhs) == 1:

@@ -23,7 +23,7 @@ Both tuple roles (t1, t2) use this same kernel: the t2 role flips the atoms
 from __future__ import annotations
 
 import functools
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -73,23 +73,28 @@ def _kernel(
     reduces: Tuple[str, ...],
     bm: int,
     bn: int,
+    row_lo: int,
     *refs,
 ):
     n_atoms = len(ops)
     # ref layout: l[a] (bm,), r[a] (bn,), rs (bm,), cs (bn,),
     #             lmin[a] (1,), lmax[a] (1,), rmin[a] (1,), rmax[a] (1,),
     #             out: count (bm,), stat[a] (bm,)
-    idx = 0
-    l = refs[idx : idx + n_atoms]; idx += n_atoms
-    r = refs[idx : idx + n_atoms]; idx += n_atoms
-    rs = refs[idx]; idx += 1
-    cs = refs[idx]; idx += 1
-    lmin = refs[idx : idx + n_atoms]; idx += n_atoms
-    lmax = refs[idx : idx + n_atoms]; idx += n_atoms
-    rmin = refs[idx : idx + n_atoms]; idx += n_atoms
-    rmax = refs[idx : idx + n_atoms]; idx += n_atoms
-    count_ref = refs[idx]; idx += 1
-    stat_refs = refs[idx : idx + n_atoms]
+    it = iter(refs)
+
+    def take(count):
+        return tuple(next(it) for _ in range(count))
+
+    lv = take(n_atoms)
+    r = take(n_atoms)
+    (rs,) = take(1)
+    (cs,) = take(1)
+    lmin = take(n_atoms)
+    lmax = take(n_atoms)
+    rmin = take(n_atoms)
+    rmax = take(n_atoms)
+    (count_ref,) = take(1)
+    stat_refs = take(n_atoms)
 
     i = pl.program_id(0)
     j = pl.program_id(1)
@@ -112,7 +117,12 @@ def _kernel(
 
     @pl.when(possible)
     def _compute():
-        row_ids = i * bm + jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 0)
+        # row ids are GLOBAL row indices: a strip-scoped launch (row_lo > 0)
+        # shifts the grid but the diagonal exclusion still compares against
+        # the untranslated column ids.
+        row_ids = (row_lo + i) * bm + jax.lax.broadcasted_iota(
+            jnp.int32, (bm, bn), 0
+        )
         col_ids = j * bn + jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1)
         viol = (
             (rs[...] > 0)[:, None]
@@ -120,7 +130,7 @@ def _kernel(
             & (row_ids != col_ids)
         )
         for a, op in enumerate(ops):
-            viol = viol & _cmp(op, l[a][...][:, None], r[a][...][None, :])
+            viol = viol & _cmp(op, lv[a][...][:, None], r[a][...][None, :])
         count_ref[...] += jnp.sum(viol.astype(jnp.int32), axis=1)
         for a, red in enumerate(reduces):
             ident = _ident(stat_refs[a].dtype, red)
@@ -142,16 +152,27 @@ def dc_role_scan_pallas(
     reduces: Sequence[str],
     block: int = 256,
     interpret: bool = False,
+    row_blocks: Optional[Tuple[int, int]] = None,
 ) -> Tuple[jnp.ndarray, List[jnp.ndarray]]:
     """Blocked theta-join violation scan (see module docstring).
 
     Shapes are padded to a multiple of ``block``; padded rows are scoped out.
+
+    ``row_blocks=(lo, hi)`` is the strip-scoped entry (DESIGN.md §11): the
+    grid only launches row blocks in ``[lo, hi)`` — a partition-strip of the
+    comparison matrix — so a strip scan costs ``(hi - lo) * nb`` tiles
+    instead of the ``nb * nb`` full grid.  Rows outside the launched range
+    get count 0 and the reduce identity, exactly as if they were scoped out.
     """
     n_atoms = len(ops)
     n = l_cols[0].shape[0]
     bm = bn = block
     nb = -(-n // block)
     npad = nb * block
+    row_lo, row_hi = (0, nb) if row_blocks is None else row_blocks
+    if not (0 <= row_lo < row_hi <= nb):
+        raise ValueError(f"row_blocks {row_blocks!r} outside grid [0, {nb})")
+    nrb = row_hi - row_lo
 
     def pad1(x, fill=0):
         return jnp.pad(x, (0, npad - n), constant_values=fill)
@@ -173,10 +194,14 @@ def dc_role_scan_pallas(
     rmin = [block_bounds(c, cs, "min") for c in rp]
     rmax = [block_bounds(c, cs, "max") for c in rp]
 
-    row_spec = pl.BlockSpec((bm,), lambda i, j: (i,))
+    # row-side inputs index from the strip offset; outputs are compact over
+    # the launched range (Pallas leaves unvisited output blocks undefined,
+    # so the full-width result is stitched back on the host side below).
+    row_spec = pl.BlockSpec((bm,), lambda i, j: (row_lo + i,))
     col_spec = pl.BlockSpec((bn,), lambda i, j: (j,))
-    bound_i = pl.BlockSpec((1,), lambda i, j: (i,))
+    bound_i = pl.BlockSpec((1,), lambda i, j: (row_lo + i,))
     bound_j = pl.BlockSpec((1,), lambda i, j: (j,))
+    out_spec = pl.BlockSpec((bm,), lambda i, j: (i,))
 
     in_specs = (
         [row_spec] * n_atoms  # l
@@ -187,20 +212,38 @@ def dc_role_scan_pallas(
         + [bound_j] * n_atoms  # rmin
         + [bound_j] * n_atoms  # rmax
     )
-    out_specs = [row_spec] + [row_spec] * n_atoms
-    out_shape = [jax.ShapeDtypeStruct((npad,), jnp.int32)] + [
-        jax.ShapeDtypeStruct((npad,), c.dtype) for c in r_cols
+    out_specs = [out_spec] + [out_spec] * n_atoms
+    out_shape = [jax.ShapeDtypeStruct((nrb * block,), jnp.int32)] + [
+        jax.ShapeDtypeStruct((nrb * block,), c.dtype) for c in r_cols
     ]
 
-    kernel = functools.partial(_kernel, tuple(ops), tuple(reduces), bm, bn)
+    kernel = functools.partial(
+        _kernel, tuple(ops), tuple(reduces), bm, bn, row_lo
+    )
     outs = pl.pallas_call(
         kernel,
-        grid=(nb, nb),
+        grid=(nrb, nb),
         in_specs=in_specs,
         out_specs=out_specs,
         out_shape=out_shape,
         interpret=interpret,
     )(*lp, *rp, rs, cs, *lmin, *lmax, *rmin, *rmax)
-    count = outs[0][:n]
-    stats = [s[:n] for s in outs[1:]]
+    if row_blocks is None:
+        count = outs[0][:n]
+        stats = [s[:n] for s in outs[1:]]
+        return count, stats
+    # stitch the strip back into full-width outputs: unlaunched rows take
+    # count 0 / the reduce identity (what the full grid gives scoped-out rows)
+    lo_row = row_lo * block
+    count = (
+        jnp.zeros((npad,), jnp.int32)
+        .at[lo_row : lo_row + nrb * block]
+        .set(outs[0])[:n]
+    )
+    stats = [
+        jnp.full((npad,), _ident(c.dtype, red), c.dtype)
+        .at[lo_row : lo_row + nrb * block]
+        .set(s)[:n]
+        for s, c, red in zip(outs[1:], r_cols, reduces)
+    ]
     return count, stats

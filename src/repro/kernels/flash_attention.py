@@ -22,7 +22,6 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -94,8 +93,8 @@ def _kernel(
 
     @pl.when(kj == nk - 1)
     def _finalize():
-        l = l_scr[...]
-        safe_l = jnp.where(l > 0, l, 1.0)
+        lsum = l_scr[...]
+        safe_l = jnp.where(lsum > 0, lsum, 1.0)
         o_ref[0] = (acc_scr[...] / safe_l).astype(o_ref.dtype)
 
 

@@ -11,7 +11,6 @@ Selection policy (``force`` overrides):
 
 from __future__ import annotations
 
-import functools
 from typing import List, Sequence, Tuple
 
 import jax
@@ -42,11 +41,15 @@ def dc_role_scan(
     reduces: Sequence[str],
     block: int = 256,
     force: str | None = None,
+    row_blocks: Tuple[int, int] | None = None,
 ) -> Tuple[jnp.ndarray, List[jnp.ndarray]]:
+    """``row_blocks=(lo, hi)`` launches only that strip of row blocks — the
+    partition-strip entry the work ledger schedules (DESIGN.md §11)."""
     mode = _mode(force)
     if mode == "ref":
         return ref.dc_role_scan(
-            l_cols, r_cols, ops, row_scope, col_scope, reduces, block=block
+            l_cols, r_cols, ops, row_scope, col_scope, reduces, block=block,
+            row_blocks=row_blocks,
         )
     return dc_role_scan_pallas(
         l_cols,
@@ -57,6 +60,7 @@ def dc_role_scan(
         reduces,
         block=block,
         interpret=(mode == "interpret"),
+        row_blocks=row_blocks,
     )
 
 

@@ -11,7 +11,6 @@ the oracle itself never materializes the O(n^2) matrix.
 
 from __future__ import annotations
 
-from functools import partial
 from typing import List, Sequence, Tuple
 
 import jax
@@ -55,6 +54,7 @@ def dc_role_scan(
     col_scope: jnp.ndarray,
     reduces: Sequence[str],
     block: int = 256,
+    row_blocks: Tuple[int, int] | None = None,
 ) -> Tuple[jnp.ndarray, List[jnp.ndarray]]:
     """Oracle for the ``dc_pairs`` theta-join kernel (one role).
 
@@ -65,15 +65,30 @@ def dc_role_scan(
     * ``count``: (n,) int32 — number of violating partners of i,
     * ``stats[a]``: (n,) — min or max (per ``reduces[a]``) of ``r_cols[a][j]``
       over i's violating partners; identity value when count == 0.
+
+    ``row_blocks=(lo, hi)`` restricts the scan to the row-block strip
+    ``[lo * block, hi * block)`` (DESIGN.md §11): only that row slice is
+    scanned against every column tile; rows outside take count 0 and the
+    reduce identity, exactly as the full scan gives scoped-out rows.
     """
     n = l_cols[0].shape[0]
     nb = -(-n // block)
+    lo_row, hi_row = 0, n
+    if row_blocks is not None:
+        lo, hi = row_blocks
+        if not (0 <= lo < hi <= nb):
+            raise ValueError(f"row_blocks {row_blocks!r} outside grid [0, {nb})")
+        lo_row, hi_row = lo * block, min(hi * block, n)
     pad = nb * block - n
-    rs = row_scope
+    rs = row_scope[lo_row:hi_row]
+    l_cols = [c[lo_row:hi_row] for c in l_cols]
     cs = jnp.pad(col_scope, (0, pad))
     r_pad = [jnp.pad(r, (0, pad)) for r in r_cols]
     idents = [_identity(r.dtype, red) for r, red in zip(r_cols, reduces)]
-    row_ids = jnp.arange(n, dtype=jnp.int32)
+    # GLOBAL row ids: the diagonal exclusion must compare a strip row's true
+    # index against the untranslated column ids
+    row_ids = jnp.arange(lo_row, hi_row, dtype=jnp.int32)
+    m = hi_row - lo_row
 
     def body(jb, state):
         count, stats = state
@@ -81,9 +96,9 @@ def dc_role_scan(
         cs_t = jax.lax.dynamic_slice_in_dim(cs, sl, block)
         col_ids = sl + jnp.arange(block, dtype=jnp.int32)
         viol = rs[:, None] & cs_t[None, :] & (row_ids[:, None] != col_ids[None, :])
-        for a, (l, op) in enumerate(zip(l_cols, ops)):
+        for a, (lcol, op) in enumerate(zip(l_cols, ops)):
             r_t = jax.lax.dynamic_slice_in_dim(r_pad[a], sl, block)
-            viol = viol & _apply_op(l[:, None], op, r_t[None, :])
+            viol = viol & _apply_op(lcol[:, None], op, r_t[None, :])
         count = count + jnp.sum(viol.astype(jnp.int32), axis=1)
         new_stats = []
         for a, red in enumerate(reduces):
@@ -99,11 +114,20 @@ def dc_role_scan(
         return count, tuple(new_stats)
 
     init = (
-        jnp.zeros((n,), jnp.int32),
-        tuple(jnp.full((n,), idents[a], r_cols[a].dtype) for a in range(len(ops))),
+        jnp.zeros((m,), jnp.int32),
+        tuple(jnp.full((m,), idents[a], r_cols[a].dtype) for a in range(len(ops))),
     )
     count, stats = jax.lax.fori_loop(0, nb, body, init)
-    return count, list(stats)
+    if row_blocks is None:
+        return count, list(stats)
+    # stitch the strip back into full-width outputs (unscanned rows get the
+    # same values the full scan gives scoped-out rows)
+    count = jnp.zeros((n,), jnp.int32).at[lo_row:hi_row].set(count)
+    stats = [
+        jnp.full((n,), idents[a], r_cols[a].dtype).at[lo_row:hi_row].set(s)
+        for a, s in enumerate(stats)
+    ]
+    return count, stats
 
 
 def semijoin(
@@ -204,10 +228,10 @@ def attention_blocked(
             jnp.zeros((b, hq, block_q, d), jnp.float32),
             jnp.int32(0),
         )
-        (m, l, acc, _), _ = jax.lax.scan(
+        (m, lsum, acc, _), _ = jax.lax.scan(
             jax.checkpoint(kv_block), init, (kb, vb)
         )
-        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        out = acc / jnp.maximum(lsum, 1e-30)[..., None]
         return qi + 1, out.astype(q.dtype)
 
     _, outs = jax.lax.scan(q_block, jnp.int32(0), qb)

@@ -43,7 +43,6 @@ from repro.dist.sharding import (
     shardings,
 )
 from repro.launch.hlo_analysis import (
-    collective_stats,
     model_flops,
     roofline_terms,
 )

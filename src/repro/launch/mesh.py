@@ -28,7 +28,6 @@ def make_production_mesh(*, multi_pod: bool = False):
             "set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
             "BEFORE importing jax (launch/dryrun.py does this)"
         )
-    import jax.experimental.mesh_utils as mesh_utils
     from jax.sharding import Mesh
 
     dev = np.asarray(devices[:n]).reshape(shape)

@@ -13,10 +13,16 @@ Two workloads share this entry point:
   Daisy instance; the driver prints throughput, cache effectiveness, and
   the detect/repair work amortized per query.  ``--background`` runs the
   cost-model-driven background cleaner (DESIGN.md §10) behind the serving
-  thread so first-touch queries stop paying detect latency:
+  thread so first-touch queries stop paying detect latency.  The cleaner
+  granularity knobs (DESIGN.md §11): ``--increment-rows`` bounds one FD
+  increment (whole lhs groups up to that many rows) and
+  ``--increment-strips`` bounds one DC increment (that many work-ledger
+  strips per lock hold — the workload carries a beds/quality DC so the
+  knob is exercised):
 
       PYTHONPATH=src python -m repro.launch.serve --workload queries \\
-          --sessions 8 --requests 40 --rows 2048 --background
+          --sessions 8 --requests 40 --rows 2048 --background \\
+          --increment-rows 256 --increment-strips 2
 """
 
 from __future__ import annotations
@@ -59,7 +65,7 @@ def run_decode(args) -> None:
 def run_queries(args) -> None:
     import threading
 
-    from repro.core.constraints import FD
+    from repro.core.constraints import Atom, DC, FD
     from repro.core.executor import Daisy, DaisyConfig
     from repro.core.operators import GroupBySpec, Pred, Query
     from repro.core.relation import make_relation
@@ -67,9 +73,26 @@ def run_queries(args) -> None:
     from repro.service import BackgroundCleaner, QueryServer
 
     ds = hospital_like(args.rows, error_frac=0.1, seed=args.seed)
-    rel = make_relation(ds.data, overlay=["zip", "city"], k=8, rules=["zc"])
+    data = dict(ds.data)
+    # a noisy quality score, mostly monotone in beds: the DC below says a
+    # smaller hospital must not outrank a larger one — the inversions the
+    # noise plants are its violations, giving the strip-grained background
+    # DC cleaning (DESIGN.md §11) real work to bound
+    rng_q = np.random.default_rng(args.seed + 1)
+    data["quality"] = (
+        data["beds"].astype(np.float32)
+        + rng_q.integers(-60, 60, args.rows).astype(np.float32)
+    )
+    rel = make_relation(
+        data, overlay=["zip", "city", "beds", "quality"], k=8,
+        rules=["zc", "bq"],
+    )
+    rules = [
+        FD("zc", "zip", "city"),
+        DC("bq", [Atom("beds", "<", "beds"), Atom("quality", ">", "quality")]),
+    ]
     daisy = Daisy(
-        {"h": rel}, {"h": [FD("zc", "zip", "city")]},
+        {"h": rel}, {"h": rules},
         DaisyConfig(use_cost_model=False, expected_queries=args.requests),
     )
     server = QueryServer(daisy, max_batch=args.max_batch)
@@ -80,14 +103,18 @@ def run_queries(args) -> None:
         serving = threading.Thread(target=server.run, name="serving", daemon=True)
         serving.start()
         cleaner = BackgroundCleaner(
-            daisy, server=server, increment_rows=max(args.rows // 8, 64)
+            daisy, server=server,
+            increment_rows=args.increment_rows or max(args.rows // 8, 64),
+            increment_strips=args.increment_strips,
         ).start()
 
-    # exploratory pool: per-neighborhood selections + one overview group-by;
-    # users revisit the same views over and over (Table 8's access pattern)
+    # exploratory pool: per-neighborhood selections + one overview group-by
+    # + a couple of DC-overlapping ranking views; users revisit the same
+    # views over and over (Table 8's access pattern)
     n_zip = max(args.rows // 20, 4)
     pool = [Query("h", preds=(Pred("zip", "==", g),)) for g in range(n_zip)]
     pool.append(Query("h", groupby=GroupBySpec(keys=("city",), agg="count")))
+    pool.append(Query("h", preds=(Pred("beds", ">=", 400),)))
 
     rng = np.random.default_rng(args.seed)
     # the whole workload is submitted before drain(), so size the per-user
@@ -134,6 +161,11 @@ def run_queries(args) -> None:
             f"{bg['scopes_completed']} scopes warmed, {bg['yields']} yields) "
             f"serving idle fraction {snap['idle_fraction']:.0%}"
         )
+        for scope, prog in snap["ledger"].items():
+            print(
+                f"  ledger {scope}: {prog['strips_done']}/{prog['strips_total']}"
+                f" strips warm, {prog['cold_rows']} cold rows"
+            )
     for s in snap["sessions"][:4]:
         print(f"  {s['sid']}: answered {s['answered']} "
               f"({s['cached_answers']} from cache)")
@@ -151,6 +183,14 @@ def main():
     ap.add_argument(
         "--background", action="store_true",
         help="run the DESIGN.md §10 background cleaner behind the serving loop",
+    )
+    ap.add_argument(
+        "--increment-rows", type=int, default=0,
+        help="rows per background FD increment (0 = rows/8; whole lhs groups)",
+    )
+    ap.add_argument(
+        "--increment-strips", type=int, default=1,
+        help="work-ledger strips per background DC increment (DESIGN.md §11)",
     )
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()

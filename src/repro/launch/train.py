@@ -16,12 +16,9 @@ straggler monitor.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config
 from repro.data.pipeline import PipelineConfig, default_pipeline

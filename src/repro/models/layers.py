@@ -7,11 +7,10 @@ normalization statistics and RoPE tables always run in float32.
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 # ------------------------------------------------------------------- norms

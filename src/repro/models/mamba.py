@@ -137,7 +137,6 @@ def mamba_decode_step(
     d_conv: int,
 ) -> Tuple[jnp.ndarray, MambaState]:
     """O(1) single-token step carrying (h, conv window)."""
-    b = x.shape[0]
     xz = jnp.einsum("bsd,dtc->bstc", x, params["in_proj"])
     xin, z = xz[..., 0, :], xz[..., 1, :]  # (b, 1, d_in)
     window = jnp.concatenate([state.conv.astype(xin.dtype), xin], axis=1)

@@ -35,7 +35,6 @@ from repro.models.config import BlockSpec, ModelConfig, SSMConfig
 from repro.models.layers import apply_norm, embed, mlp, unembed
 from repro.models.mamba import (
     MambaState,
-    init_mamba_state,
     mamba_decode_step,
     mamba_mixer,
 )
@@ -368,11 +367,9 @@ def decode_step(
                 s_cache = ck.shape[1]
                 if blk.attn_type == "local":
                     slot = jnp.remainder(t, s_cache)  # ring buffer
-                    window = cfg.window
                     t_eff = jnp.minimum(t + 1, s_cache)
                 else:
                     slot = t
-                    window = None
                     t_eff = t + 1
                 ck, cv = update_cache(ck, cv, new_k, new_v, slot)
                 kws = {}
@@ -511,7 +508,6 @@ def prefill(
                         v_keep = jnp.pad(v_keep, ((0, 0), (0, pad), (0, 0), (0, 0)))
                 stash[f"block_{i}"] = {"k": k_keep, "v": v_keep}
             else:
-                x_res = x
                 x = x + mamba_mixer(h, bp["mamba"], ssm.d_state, ssm.d_conv,
                                     mamba_chunk)
                 # final state recomputed cheaply for the cache via decode on
@@ -584,8 +580,8 @@ def _mamba_final_state(h, mp, ssm, chunk: int = 128) -> MambaState:
         a = jnp.exp(dtc[..., None] * A[None, None])
         u = (dtc * xc)[..., None] * Bc[..., None, :]
 
-        def combine(l, r):
-            return l[0] * r[0], l[1] * r[0] + r[1]
+        def combine(a, b):
+            return a[0] * b[0], a[1] * b[0] + b[1]
 
         aa, uu = jax.lax.associative_scan(combine, (a, u), axis=1)
         return aa[:, -1] * hc + uu[:, -1], None

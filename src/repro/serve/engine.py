@@ -14,7 +14,7 @@ Per-slot state is host-side bookkeeping; device state is the cache pytree.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp

@@ -22,8 +22,11 @@ answer is computed.
 * **How it yields.**  Before each increment the cleaner checks
   ``server.pending_count()`` and defers (``wait_idle``) while foreground
   tickets queue; each increment holds ``Daisy.lock`` for one
-  ``clean_scope_increment`` only, so a foreground ticket waits at most
-  one increment (the preemption-latency bound test).
+  ``clean_scope_increment`` only — bounded for FDs by ``increment_rows``
+  (whole lhs groups) and for DCs by ``increment_strips`` ledger strips
+  (DESIGN.md §11; one strip x rest-of-dataset scan, NOT a full pairwise
+  pass) — so a foreground ticket waits at most one bounded increment
+  (the preemption-latency bound tests, FD and DC).
 * **Why answers stay sound.**  Increments run the foreground cleaning
   pipeline itself and bump the same per-scope versions, so the cache
   invalidates exactly the fingerprints whose dependency scopes were
@@ -83,6 +86,7 @@ class BackgroundCleaner:
         server=None,
         metrics: Optional[ServiceMetrics] = None,
         increment_rows: int = 512,
+        increment_strips: int = 1,
         idle_wait: float = 0.02,
     ):
         self.daisy = daisy
@@ -91,6 +95,9 @@ class BackgroundCleaner:
             server.metrics if server is not None else ServiceMetrics()
         )
         self.increment_rows = increment_rows
+        # DC increments clean this many ledger strips per lock hold
+        # (DESIGN.md §11) — the DC analogue of ``increment_rows``
+        self.increment_strips = max(int(increment_strips), 1)
         self.idle_wait = idle_wait
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
@@ -185,7 +192,9 @@ class BackgroundCleaner:
             with daisy.lock:
                 d0, r0 = daisy.detect_calls, daisy.repair_calls
                 step_rep = daisy.clean_scope_increment(
-                    top.table, top.rule, max_rows=self.increment_rows
+                    top.table, top.rule,
+                    max_rows=self.increment_rows,
+                    max_strips=self.increment_strips,
                 )
                 if step_rep is None:  # raced warm / stale ranking entry
                     self._ranked.pop(0)
@@ -193,10 +202,12 @@ class BackgroundCleaner:
                 dd = daisy.detect_calls - d0
                 rd = daisy.repair_calls - r0
                 completed = daisy.cold_count(top.table, top.rule) == 0
+                progress = daisy.ledger.progress()
             if completed:
                 self._ranked.pop(0)
             seconds = time.perf_counter() - t0
             self.metrics.observe_background(dd, rd, seconds, completed)
+            self.metrics.observe_ledger(progress)
             return IncrementReport(
                 table=top.table,
                 rule=top.rule,

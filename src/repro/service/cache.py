@@ -3,10 +3,14 @@
 Entries key on ``(query fingerprint, version)``, where the version the
 server passes is the *scope-version vector* over the query's dependency
 set (``scheduler.rule_deps``): one monotone counter per (table, rule)
-whose cleaning commits can change the answer.  The executor bumps a
-rule's scope version on every candidate-overlay merge and checked-bit
-commit for that rule, and its cleaning steps *skip* — no state change, no
-bump — whenever a query's scope is already checked.  Re-executing a query
+whose cleaning commits can change the answer — since DESIGN.md §11 these
+counters live in the executor's work ledger, whose per-strip commits
+(foreground steps, background strip increments) each bump exactly the
+committing rule's entry, so ledger-vector invalidation stays exact at
+rule granularity even when cleaning advances one strip at a time.  The
+executor bumps a rule's scope version on every candidate-overlay merge
+and checked-bit commit for that rule, and its cleaning steps *skip* — no
+state change, no bump — whenever a query's scope is already checked.  Re-executing a query
 while its dependency vector is unchanged is therefore a pure function of
 the probabilistic instance and returns bit-identical answers (the
 soundness contract, asserted in tests/test_service.py), so a hit never
@@ -32,7 +36,7 @@ treated as immutable (device arrays + a report nobody mutates).
 from __future__ import annotations
 
 from collections import OrderedDict
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 
 class ResultCache:
@@ -43,7 +47,7 @@ class ResultCache:
         if capacity < 1:
             raise ValueError("cache capacity must be >= 1")
         self.capacity = capacity
-        self._entries: "OrderedDict[str, Tuple[int, object]]" = OrderedDict()
+        self._entries: OrderedDict[str, tuple[int, object]] = OrderedDict()
         self.hits = 0
         self.misses = 0
         self.stale = 0  # fingerprint present but clean_version moved on

@@ -63,6 +63,12 @@ class ServiceMetrics:
     bg_scopes_completed: int = 0  # increments that left their scope warm
     bg_yields: int = 0  # times the cleaner deferred to pending tickets
     bg_busy_s: float = 0.0  # wall-clock spent inside increments
+    # latest work-ledger progress snapshot (DESIGN.md §11): per-scope
+    # strips done / total + cold rows, updated by whichever side observed
+    # it last (cleaner after each increment, server on snapshot)
+    ledger_progress: Dict[str, Dict[str, int]] = dataclasses.field(
+        default_factory=dict
+    )
     max_reports: int = 32
     recent_reports: List[Dict[str, object]] = dataclasses.field(default_factory=list)
     started: float = dataclasses.field(default_factory=time.perf_counter)
@@ -118,6 +124,14 @@ class ServiceMetrics:
         """Record the cleaner deferring to foreground work (cleaner thread)."""
         with self._bg_lock:
             self.bg_yields += 1
+
+    def observe_ledger(self, progress: Dict[str, Dict[str, int]]) -> None:
+        """Store the latest per-scope ledger progress (strips done / total,
+        cold rows — ``WorkLedger.progress()``, DESIGN.md §11).  Called by
+        the cleaner after each increment and by the server at snapshot
+        time; last writer wins, which is fine for a monotone gauge."""
+        with self._bg_lock:
+            self.ledger_progress = dict(progress)
 
     # -------------------------------------------------------------- derived
     @property
@@ -178,5 +192,9 @@ class ServiceMetrics:
                 "yields": self.bg_yields,
                 "busy_s": round(self.bg_busy_s, 6),
             },
+            # per-scope warmup progress (strips done / total), so operators
+            # and benchmarks report HOW warm each rule is, not only detect
+            # counts (DESIGN.md §11)
+            "ledger": {k: dict(v) for k, v in self.ledger_progress.items()},
             "recent_reports": list(self.recent_reports),
         }

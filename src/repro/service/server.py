@@ -250,7 +250,10 @@ class QueryServer:
 
     def snapshot(self) -> Dict[str, object]:
         """JSON-serializable state: metrics (with foreground/background
-        attribution), cache stats, clean version, per-session summaries."""
+        attribution and per-scope ledger progress), cache stats, clean
+        version, per-session summaries."""
+        with self.daisy.lock:  # coverage counts are mutated under this lock
+            self.metrics.observe_ledger(self.daisy.ledger.progress())
         snap = self.metrics.snapshot()
         snap["cache"] = self.cache.stats()
         snap["clean_version"] = self.daisy.clean_version

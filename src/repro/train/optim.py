@@ -8,7 +8,7 @@ verbatim (dist/sharding.opt_state_specs).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, NamedTuple, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

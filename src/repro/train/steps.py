@@ -10,8 +10,7 @@ gradient tree (sharded like the params).
 
 from __future__ import annotations
 
-import functools
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -78,7 +77,6 @@ def make_train_step(
             (grads, loss), _ = jax.lax.scan(
                 acc_body, (grad_zero, jnp.float32(0.0)), micro
             )
-            metrics = {}
         new_err = None
         if grad_compress:
             from repro.dist.collectives import grad_allreduce_compressed

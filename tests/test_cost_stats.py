@@ -82,23 +82,28 @@ class TestAlgorithm2:
     def test_decision_narrow_query_high_accuracy(self):
         st, sal = self._stats()
         vals = sal[(sal >= 1000) & (sal <= 1100)]
-        dec = algorithm2_decide(st, vals, len(vals), 0, threshold=0.001)
+        dec = algorithm2_decide(st, vals, len(vals), 0.0, threshold=0.001)
         assert 0 <= dec.accuracy <= 1
         assert not dec.full_clean  # tiny threshold -> stay partial
 
     def test_decision_low_accuracy_forces_full(self):
         st, sal = self._stats()
         vals = sal[:5]
-        dec = algorithm2_decide(st, vals, 5, 0, threshold=0.999)
+        dec = algorithm2_decide(st, vals, 5, 0.0, threshold=0.999)
         # with a tiny answer and many estimated external errors, accuracy
         # falls below the (extreme) threshold -> full cleaning (Fig. 12)
         assert dec.full_clean
 
-    def test_support_grows_with_checked_partitions(self):
+    def test_support_is_the_ledger_coverage_fraction(self):
+        """Since the work ledger (DESIGN.md §11) the caller passes its
+        strip-coverage fraction straight through (clamped to [0, 1])."""
         st, sal = self._stats()
-        d0 = algorithm2_decide(st, sal[:10], 10, 0, 0.5)
-        d1 = algorithm2_decide(st, sal[:10], 10, 5, 0.5)
+        d0 = algorithm2_decide(st, sal[:10], 10, 0.0, 0.5)
+        d1 = algorithm2_decide(st, sal[:10], 10, 0.5, 0.5)
+        d2 = algorithm2_decide(st, sal[:10], 10, 7.0, 0.5)
         assert d1.support > d0.support
+        assert d1.support == 0.5
+        assert d2.support == 1.0
 
 
 class TestCostModelIntegration:

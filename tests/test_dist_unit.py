@@ -18,7 +18,6 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.configs import ARCH_IDS, get_config
 from repro.dist.hints import hint
 from repro.dist.sharding import (
-    _PARAM_RULES,
     batch_specs,
     cache_specs,
     param_specs,

@@ -4,7 +4,7 @@ offline equivalence, multi-rule merge, group-by, cost-model switch."""
 import numpy as np
 
 from repro.core.accuracy import repair_accuracy
-from repro.core.constraints import DC, FD, Atom
+from repro.core.constraints import FD
 from repro.core.executor import Daisy, DaisyConfig
 from repro.core.offline import OfflineCleaner
 from repro.core.operators import GroupBySpec, Pred, Query
@@ -67,7 +67,7 @@ class TestSPQueries:
             Query("cities", groupby=GroupBySpec(keys=("city",), agg="count"))
         )
         assert res.report.steps[0].mode == "full"
-        keys = np.asarray(res.groups[f"key_city"])
+        keys = np.asarray(res.groups["key_city"])
         counts = np.asarray(res.groups["count"])
         got = {int(k): float(c) for k, c in zip(keys, counts) if c > 0}
         # expected-value semantics: 9001 group contributes {LA 2/3, SF 1/3}

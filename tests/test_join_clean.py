@@ -16,7 +16,7 @@ import numpy as np
 from repro.core.constraints import FD
 from repro.core.executor import Daisy, DaisyConfig
 from repro.core.operators import JoinClause, Pred, Query
-from tests.conftest import LA, SF
+from tests.conftest import LA
 
 
 def make_engine(join_tables):

@@ -3,7 +3,6 @@
 Every kernel sweeps shapes/dtypes and asserts allclose against ref.py.
 """
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -154,7 +154,6 @@ class TestSetopsProperties:
     def test_member_in_matches_numpy(self, data):
         rel, mask = data
         a = rel.columns["a"]
-        b = rel.columns["b"]
         got = np.asarray(member_in([a], rel.valid, [a], mask))
         av = np.asarray(a)
         expect = np.isin(av, av[np.asarray(mask & rel.valid)]) & np.asarray(rel.valid)

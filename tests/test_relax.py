@@ -6,10 +6,9 @@ The fixture rows (Table 2a):
 
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core.relax import default_max_iters, lemma2_prob, lemma3_upper_bound, relax_fd
-from tests.conftest import LA, NY, SF
+from tests.conftest import LA, SF
 
 
 def mask_of(rel, rows):

@@ -209,7 +209,7 @@ class TestCleanPipeline:
             PipelineConfig(batch_docs=4, seq_len=32, vocab_size=128),
         )
         batches = list(
-            pipe.batches([[Pred("language", "==", l)] for l in range(4)], steps=6)
+            pipe.batches([[Pred("language", "==", lang)] for lang in range(4)], steps=6)
         )
         assert len(batches) == 6
         for b in batches:
@@ -230,17 +230,13 @@ class TestCleanPipeline:
             meta, [FD("sl", "source", "language")],
             PipelineConfig(batch_docs=4, seq_len=16, vocab_size=64),
         )
-        rel_before = pipe.daisy.db["docs"]
         total_recovered = 0
         for lang in range(16):
             docs = pipe.request([Pred("language", "==", lang)])
             truth_docs = np.flatnonzero(meta.truth["language"] == lang)
-            dirty_hits = np.intersect1d(
-                docs, np.flatnonzero(meta.error_rows)
-            )
             total_recovered += len(np.intersect1d(docs, truth_docs))
         # after cleaning, most truly-lang-L docs qualify for query L again
         truth_total = sum(
-            (meta.truth["language"] == l).sum() for l in range(16)
+            (meta.truth["language"] == lang).sum() for lang in range(16)
         )
         assert total_recovered / truth_total > 0.9
