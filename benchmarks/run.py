@@ -23,6 +23,7 @@ from benchmarks import (
     fig13_join_queries,
     fig_dist_detect,
     serve_bg_warmup,
+    serve_ingest,
     serve_throughput,
     table5_accuracy,
     table8_exploratory,
@@ -39,6 +40,7 @@ MODULES = [
     ("fig_dist", fig_dist_detect),
     ("serve", serve_throughput),
     ("serve_bg", serve_bg_warmup),
+    ("serve_ingest", serve_ingest),
     ("table5", table5_accuracy),
     ("table8", table8_exploratory),
 ]

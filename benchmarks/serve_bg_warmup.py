@@ -47,6 +47,7 @@ from repro.core.constraints import DC, FD, Atom
 from repro.core.executor import Daisy, DaisyConfig
 from repro.core.operators import Pred, Query
 from repro.core.relation import make_relation
+from repro.launch.serve import ServeOptions
 from repro.service import BackgroundCleaner, QueryServer, ResultCache
 
 RULES = {"h": [FD("zc", "zip", "city")]}
@@ -95,20 +96,25 @@ def run_serial(db, cfg, cycle_queries):
     return sigs
 
 
-def run_service(db, cfg, cycle_queries, idle_increments: int, increment_rows: int,
-                background: bool):
-    """Serve the workload cycle by cycle; with ``background`` the cleaner
-    drains up to ``idle_increments`` cold-scope increments in the idle
-    window after each cycle (the deterministic, cooperative form of the
-    idle-budget tuning knob — the threaded form is ``BackgroundCleaner.start``)."""
+def run_service(db, cfg, cycle_queries, idle_increments: int, opts: ServeOptions):
+    """Serve the workload cycle by cycle; with ``opts.background`` the
+    cleaner drains up to ``idle_increments`` cold-scope increments in the
+    idle window after each cycle (the deterministic, cooperative form of the
+    idle-budget tuning knob — the threaded form is ``BackgroundCleaner.start``).
+    All serving knobs arrive through the shared ``ServeOptions`` bundle, so
+    they line up 1:1 with the CLI driver's flags."""
     daisy = Daisy(db, RULES, cfg)
-    server = QueryServer(daisy, cache=ResultCache(capacity=512), max_batch=8)
+    server = QueryServer(
+        daisy, cache=ResultCache(capacity=512), max_batch=opts.max_batch
+    )
     cleaner = (
-        BackgroundCleaner(daisy, server=server, increment_rows=increment_rows)
-        if background
+        BackgroundCleaner(daisy, server=server,
+                          increment_rows=opts.fd_increment_rows,
+                          increment_strips=opts.increment_strips)
+        if opts.background
         else None
     )
-    sessions = [server.open_session(f"user{i}") for i in range(4)]
+    sessions = [server.open_session(f"user{i}") for i in range(opts.sessions)]
     sigs, per_cycle = [], []
     for c, queries in enumerate(cycle_queries):
         d0 = server.metrics.detect_calls
@@ -202,7 +208,6 @@ def run(quick: bool = False):
     v0, step = (4, 4) if quick else (8, 8)
     cycles = 8 if quick else 10
     idle_increments = 6 if quick else 10
-    increment_rows = (n // groups) * (step + 1)
     cfg = DaisyConfig(use_cost_model=False)
     cycle_queries = workload(groups, v0, step, cycles)
     n_queries = sum(len(qs) for qs in cycle_queries)
@@ -213,10 +218,13 @@ def run(quick: bool = False):
 
     rows, results = [], {}
     for variant, background in (("service", False), ("service+bg", True)):
+        opts = ServeOptions(
+            sessions=4, rows=n, background=background,
+            increment_rows=(n // groups) * (step + 1),
+        )
         t0 = time.perf_counter()
         sigs, server, per_cycle = run_service(
-            build_db(n, groups), cfg, cycle_queries,
-            idle_increments, increment_rows, background,
+            build_db(n, groups), cfg, cycle_queries, idle_increments, opts,
         )
         dt = time.perf_counter() - t0
         snap = server.snapshot()

@@ -18,7 +18,14 @@ from repro.core.constraints import FD
 from repro.core.executor import Daisy, DaisyConfig
 from repro.core.operators import Pred, Query
 from repro.core.relation import Dictionary, make_relation
+from repro.launch.serve import ServeOptions
 from repro.service import BackgroundCleaner, QueryServer
+
+# the serving knobs live in ONE bundle shared with the CLI driver
+# (repro.launch.serve) and the serving benchmarks, so "increment_rows"
+# here means exactly what --increment-rows means there
+opts = ServeOptions(sessions=3, rows=5, max_batch=8,
+                    increment_rows=8, increment_strips=1)
 
 city = Dictionary(["Los Angeles", "San Francisco", "New York", "Boston"])
 rel = make_relation(
@@ -39,8 +46,9 @@ daisy = Daisy(
     DaisyConfig(use_cost_model=False),
 )
 
-server = QueryServer(daisy)
-analysts = [server.open_session(name) for name in ("ana", "ben", "cho")]
+server = QueryServer(daisy, max_batch=opts.max_batch)
+analysts = [server.open_session(name)
+            for name in ("ana", "ben", "cho")[: opts.sessions]]
 
 # everyone explores the same neighborhood — overlapping σ, repeated queries
 # (nobody touches the 10001 cluster yet: it stays cold)
@@ -72,8 +80,9 @@ print("per-session lineage:", [s["cached_answers"] for s in snap["sessions"]],
 # increment_strips is the DC analogue — work-ledger strips per increment
 # (DESIGN.md §11) — unused by this FD-only table but the knob to reach
 # for when a DC scope must background-clean with bounded pauses.
-cleaner = BackgroundCleaner(daisy, server=server, increment_rows=8,
-                            increment_strips=1)
+cleaner = BackgroundCleaner(daisy, server=server,
+                            increment_rows=opts.increment_rows,
+                            increment_strips=opts.increment_strips)
 increments = cleaner.drain()
 d0 = server.metrics.detect_calls
 t = server.submit(analysts[0], ny_zip)
@@ -87,3 +96,20 @@ print(f"background: {increments} increments ({bg['detect_calls']} detects), "
 print("warmup progress:",
       {scope: f"{p['strips_done']}/{p['strips_total']} strips"
        for scope, p in snap["ledger"].items()})
+
+# streaming ingest (DESIGN.md §12): two new listings for the 10001 cluster
+# arrive through the SAME ticket queue — the append is a batch barrier, so
+# the re-issued ny_zip query after it sees the grown instance (the cache
+# entry for ny_zip is invalidated by the table's __rows__ version bump,
+# nothing else is)
+ingest_t = server.ingest("cities", {
+    "zip": np.array([10001, 10001]),
+    "city": city.encode_many(["New York", "Boston"]),
+})
+t2 = server.submit(analysts[0], ny_zip)
+server.drain()
+rep = ingest_t.result
+print(f"ingested {rep.rows} rows at position {rep.start} "
+      f"(capacity {rep.capacity_before} -> {rep.capacity}), "
+      f"ny_zip now rows {np.flatnonzero(np.asarray(t2.result.mask)).tolist()} "
+      f"({'cache' if t2.cached else 'executed'})")

@@ -6,13 +6,18 @@ Public API re-exports.
 from repro.core.accuracy import Accuracy, repair_accuracy
 from repro.core.constraints import DC, FD, Atom, fd_as_dc, overlaps_query
 from repro.core.cost import CostModel
-from repro.core.detect import detect_dc, detect_fd
-from repro.core.executor import Daisy, DaisyConfig, DaisyResult
-from repro.core.ledger import StripLedger, WorkLedger
+from repro.core.detect import DetectResult, detect_auto, detect_dc, detect_fd
+from repro.core.executor import Daisy, DaisyConfig, DaisyResult, IngestReport
+from repro.core.ledger import (
+    TABLE_ROWS_RULE,
+    PendingIngest,
+    StripLedger,
+    WorkLedger,
+)
 from repro.core.offline import OfflineCleaner
 from repro.core.operators import GroupBySpec, JoinClause, Pred, Query, filter_mask
 from repro.core.planner import plan_query
-from repro.core.relation import Dictionary, Relation, make_relation
+from repro.core.relation import Dictionary, Relation, append_rows, make_relation
 from repro.core.relax import relax_fd
 from repro.core.repair import repaired_value
 from repro.core.update import apply_candidates, mark_checked, unchecked
@@ -25,17 +30,23 @@ __all__ = [
     "Daisy",
     "DaisyConfig",
     "DaisyResult",
+    "DetectResult",
     "Dictionary",
     "FD",
     "GroupBySpec",
+    "IngestReport",
     "JoinClause",
     "OfflineCleaner",
+    "PendingIngest",
     "Pred",
     "Query",
     "Relation",
     "StripLedger",
+    "TABLE_ROWS_RULE",
     "WorkLedger",
+    "append_rows",
     "apply_candidates",
+    "detect_auto",
     "detect_dc",
     "detect_fd",
     "fd_as_dc",

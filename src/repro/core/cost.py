@@ -85,22 +85,29 @@ class ScopePriority:
     cold_rows: int  # unchecked rows a foreground detect would still scan
     expected_pairs: float
     touch_probability: float
+    # streaming ingest (DESIGN.md §12): >1 when the scope holds FRESH cold
+    # strips or queued ingest-deltas — appended rows are the coldest state a
+    # foreground query can hit, so they outrank equally-priced steady scopes
+    fresh_boost: float = 1.0
+    pending: bool = False  # queued ingest-deltas awaiting _process_pending
 
     @property
     def priority(self) -> float:
         """Expected foreground work saved by cleaning this scope now."""
-        return self.expected_pairs * self.touch_probability
+        return self.expected_pairs * self.touch_probability * self.fresh_boost
 
 
 def prioritize_scopes(scopes: Iterable[ScopePriority]) -> List[ScopePriority]:
     """Sort cold scopes by descending expected saved work; drop warm ones.
+    A scope with zero cold rows but queued ingest-deltas is still work
+    (DESIGN.md §12) and is kept.
 
     Ties break on (table, rule) so the background cleaner's pick is
     deterministic under equal priorities (the seeded interleaving tests
     rely on that).
     """
     return sorted(
-        (s for s in scopes if s.cold_rows > 0),
+        (s for s in scopes if s.cold_rows > 0 or s.pending),
         key=lambda s: (-s.priority, s.table, s.rule),
     )
 

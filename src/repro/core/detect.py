@@ -18,9 +18,12 @@ Scopes: ``row_scope`` is the paper's "query result (+ extra)" side and
 ``col_scope`` the "rest of the dataset" side — incremental cleaning shrinks
 these masks instead of re-partitioning a matrix.
 
-``detect_dc_auto`` / ``detect_fd_auto`` are the dispatch seam to the
-distributed path (DESIGN.md §8): on a mesh, rules with an equality key are
-routed through ``dist.shuffle.shuffle_by_key`` and scanned per shard.
+``detect_auto`` is the dispatch seam to the distributed path (DESIGN.md
+§8): on a mesh, rules with an equality key are routed through
+``dist.shuffle.shuffle_by_key`` and scanned per shard.  It always returns
+a ``DetectResult`` carrying the detection plus the sharded routing info
+(or ``None`` on the dense path); the four ``detect_{dc,fd}_auto[_info]``
+functions remain as deprecated thin aliases.
 """
 
 from __future__ import annotations
@@ -100,6 +103,7 @@ def detect_dc(
     col_scope: jnp.ndarray,
     block: int = 256,
     row_blocks: Tuple[int, int] | None = None,
+    col_blocks: Tuple[int, int] | None = None,
 ) -> DCDetectResult:
     """Detect DC violations between ``row_scope`` rows (role t1) and
     ``col_scope`` rows (role t2), both directions.
@@ -108,6 +112,12 @@ def detect_dc(
     only the row blocks of that strip are launched — the executor passes the
     covering block range of the strips a ledger-driven step scans, so a
     strip increment pays ``strip x n`` tile work instead of ``n x n``.
+
+    ``col_blocks`` restricts the PARTNER side the same way — the
+    ingest-delta entry (DESIGN.md §12): checked rows scan only the freshly
+    appended column strip, costing O(checked x fresh) tiles.  Both roles
+    are launched over the same partner strip (the t2 role flips the atoms
+    but its partners live in ``col_scope`` all the same).
     """
     row_scope = row_scope & rel.valid
     col_scope = col_scope & rel.valid
@@ -119,7 +129,7 @@ def detect_dc(
     # role t1: rows are t1, partners t2 in col_scope; stat over partner r.
     t1_count, t1_stat = kops.dc_role_scan(
         l_cols, r_cols, ops, row_scope, col_scope, reduces, block=block,
-        row_blocks=row_blocks,
+        row_blocks=row_blocks, col_blocks=col_blocks,
     )
     # role t2: rows are t2 — atom becomes row.r flip(op) col.l; stat over
     # partner l with the same reduce orientation seen from the row's side.
@@ -127,7 +137,7 @@ def detect_dc(
     t2_reduces = [_T1_REDUCE[op] for op in flipped]
     t2_count, t2_stat = kops.dc_role_scan(
         r_cols, l_cols, flipped, row_scope, col_scope, t2_reduces, block=block,
-        row_blocks=row_blocks,
+        row_blocks=row_blocks, col_blocks=col_blocks,
     )
     return DCDetectResult(t1_count, t2_count, tuple(t1_stat), tuple(t2_stat))
 
@@ -158,6 +168,82 @@ def will_shard(rule, mesh, n_shards: int | None = None) -> bool:
     return default_n_shards(mesh) >= 2
 
 
+class DetectResult(NamedTuple):
+    """What any detection dispatch returns: the rule-shaped detection
+    (``FDDetectResult`` for FDs, ``DCDetectResult`` for DCs) plus the
+    ``ShardedDetectInfo`` of the routing when the sharded path ran
+    (``None`` on the dense path) — the executor feeds ``info`` to the cost
+    model so the full/partial decision prices the shuffle (DESIGN.md §10).
+    """
+
+    detection: object  # FDDetectResult | DCDetectResult
+    info: object | None  # dist.detect.ShardedDetectInfo | None
+
+
+def detect_auto(
+    rel: Relation,
+    rule,
+    row_scope: jnp.ndarray,
+    col_scope: jnp.ndarray | None = None,
+    *,
+    k: int | None = None,
+    block: int = 256,
+    mesh=None,
+    n_shards: int | None = None,
+    row_blocks: Tuple[int, int] | None = None,
+    col_blocks: Tuple[int, int] | None = None,
+    strip_rows: int | None = None,
+) -> DetectResult:
+    """THE detection entry point: dispatch ``rule`` (FD or DC) to the dense
+    or sharded scan and always return a ``DetectResult``.
+
+    Sharding: when a mesh is active and the rule carries an equality key
+    (``will_shard``), rows route through ``dist.shuffle.shuffle_by_key``
+    and scan per shard — bit-identical to the dense result, with the
+    routing's ``ShardedDetectInfo`` attached.
+
+    FD rules use ``row_scope`` as the group-by scope and ``k`` for the
+    candidate width; ``col_scope``/``block``/``row_blocks``/``col_blocks``
+    are DC-only (``col_scope`` is required for DCs).  ``row_blocks`` /
+    ``col_blocks`` strip-scope the DENSE DC scan only (the sharded path
+    re-routes rows, so strip locality does not survive the shuffle; its
+    scopes already shrink to the strip's rows).  ``strip_rows`` feeds the
+    sharded path's per-shard strip-coverage report (DESIGN.md §11).
+    """
+    if isinstance(rule, FD):
+        if will_shard(rule, mesh, n_shards):
+            from repro.dist.detect import detect_fd_sharded_info
+
+            det, info = detect_fd_sharded_info(
+                rel, rule, row_scope, mesh, k=k, n_shards=n_shards,
+                strip_rows=strip_rows,
+            )
+            return DetectResult(det, info)
+        return DetectResult(detect_fd(rel, rule, row_scope, k=k), None)
+    if isinstance(rule, DC):
+        if col_scope is None:
+            raise ValueError("detect_auto on a DC requires col_scope")
+        if will_shard(rule, mesh, n_shards):
+            from repro.dist.detect import detect_dc_sharded_info
+
+            det, info = detect_dc_sharded_info(
+                rel, rule, row_scope, col_scope, mesh, n_shards=n_shards,
+                block=block, strip_rows=strip_rows,
+            )
+            return DetectResult(det, info)
+        return DetectResult(
+            detect_dc(
+                rel, rule, row_scope, col_scope, block=block,
+                row_blocks=row_blocks, col_blocks=col_blocks,
+            ),
+            None,
+        )
+    raise TypeError(f"detect_auto: unsupported rule type {type(rule).__name__}")
+
+
+# Deprecated thin aliases (pre-§12 API): prefer ``detect_auto``.
+
+
 def detect_dc_auto_info(
     rel: Relation,
     dc: DC,
@@ -169,27 +255,13 @@ def detect_dc_auto_info(
     row_blocks: Tuple[int, int] | None = None,
     strip_rows: int | None = None,
 ):
-    """``detect_dc`` with sharded dispatch, returning ``(result, info)``
-    where ``info`` is the ``ShardedDetectInfo`` of the routing (per-shard
-    row counts, retry history) when the sharded path ran, else ``None`` —
-    the executor feeds it to the cost model so the full/partial decision
-    prices the shuffle path (DESIGN.md §10).
-
-    ``row_blocks`` strip-scopes the DENSE scan only (the sharded path
-    re-routes rows, so strip locality does not survive the shuffle; its
-    scopes already shrink to the strip's rows).  ``strip_rows`` is passed to
-    the sharded path for its per-shard strip-coverage report (DESIGN.md §11).
-    """
-    if will_shard(dc, mesh, n_shards):
-        from repro.dist.detect import detect_dc_sharded_info
-
-        return detect_dc_sharded_info(
-            rel, dc, row_scope, col_scope, mesh, n_shards=n_shards, block=block,
-            strip_rows=strip_rows,
+    """Deprecated: ``detect_auto(rel, dc, ...)`` — returns the same
+    ``(detection, info)`` pair."""
+    return tuple(
+        detect_auto(
+            rel, dc, row_scope, col_scope, block=block, mesh=mesh,
+            n_shards=n_shards, row_blocks=row_blocks, strip_rows=strip_rows,
         )
-    return (
-        detect_dc(rel, dc, row_scope, col_scope, block=block, row_blocks=row_blocks),
-        None,
     )
 
 
@@ -202,14 +274,10 @@ def detect_dc_auto(
     mesh=None,
     n_shards: int | None = None,
 ) -> DCDetectResult:
-    """``detect_dc`` with sharded dispatch: when a mesh is active and the DC
-    carries a same-attribute equality atom, route rows by the equality key
-    and scan per shard (bit-identical results); otherwise the dense scan.
-    """
-    det, _ = detect_dc_auto_info(
+    """Deprecated: ``detect_auto(rel, dc, ...).detection``."""
+    return detect_auto(
         rel, dc, row_scope, col_scope, block=block, mesh=mesh, n_shards=n_shards
-    )
-    return det
+    ).detection
 
 
 def detect_fd_auto_info(
@@ -221,16 +289,14 @@ def detect_fd_auto_info(
     n_shards: int | None = None,
     strip_rows: int | None = None,
 ):
-    """``detect_fd`` with sharded dispatch, returning ``(result, info)``
-    (``info`` as in ``detect_dc_auto_info``, including its ``strip_rows``
-    coverage-report plumbing)."""
-    if will_shard(fd, mesh, n_shards):
-        from repro.dist.detect import detect_fd_sharded_info
-
-        return detect_fd_sharded_info(
-            rel, fd, scope, mesh, k=k, n_shards=n_shards, strip_rows=strip_rows
+    """Deprecated: ``detect_auto(rel, fd, ...)`` — returns the same
+    ``(detection, info)`` pair."""
+    return tuple(
+        detect_auto(
+            rel, fd, scope, k=k, mesh=mesh, n_shards=n_shards,
+            strip_rows=strip_rows,
         )
-    return detect_fd(rel, fd, scope, k=k), None
+    )
 
 
 def detect_fd_auto(
@@ -241,6 +307,5 @@ def detect_fd_auto(
     mesh=None,
     n_shards: int | None = None,
 ) -> FDDetectResult:
-    """``detect_fd`` with sharded dispatch (FDs always key on the lhs)."""
-    det, _ = detect_fd_auto_info(rel, fd, scope, k=k, mesh=mesh, n_shards=n_shards)
-    return det
+    """Deprecated: ``detect_auto(rel, fd, ...).detection``."""
+    return detect_auto(rel, fd, scope, k=k, mesh=mesh, n_shards=n_shards).detection

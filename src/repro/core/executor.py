@@ -32,7 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -40,8 +40,8 @@ import numpy as np
 from repro.core import stats as statsmod
 from repro.core.constraints import DC, FD
 from repro.core.cost import CostModel, sharded_detect_cost
-from repro.core.detect import detect_dc_auto_info, detect_fd, detect_fd_auto_info
-from repro.core.ledger import WorkLedger
+from repro.core.detect import detect_auto, detect_fd
+from repro.core.ledger import TABLE_ROWS_RULE, WorkLedger
 from repro.core.operators import (
     GroupBySpec,
     JoinState,
@@ -61,8 +61,9 @@ from repro.core.planner import (
     strip_step,
 )
 from repro.core.relax import relax_fd
-from repro.core.relation import Relation
-from repro.core.repair import dc_repair_candidates, fd_repair_candidates
+from repro.core.relation import Relation, append_rows
+from repro.core.repair import Candidates, dc_repair_candidates, fd_repair_candidates
+from repro.core.setops import group_distinct_candidates
 from repro.core.update import apply_candidates, mark_checked, unchecked
 
 
@@ -135,6 +136,27 @@ class DaisyResult:
     join: Optional[JoinState] = None  # join lineage
     groups: Optional[Dict[str, jnp.ndarray]] = None  # group-by output
     report: ExecReport = dataclasses.field(default_factory=ExecReport)
+
+
+@dataclasses.dataclass
+class IngestReport:
+    """What one ``Daisy.ingest`` call did (DESIGN.md §12): where the rows
+    landed, whether the relation grew, which strips went fresh, and which
+    rule scopes queued an ingest-delta for their next cleaning step."""
+
+    table: str
+    rows: int  # appended row count
+    start: int  # row index of the first appended row
+    capacity_before: int
+    capacity: int
+    grown: bool
+    fresh_strips: int  # strips (per rule scope, max over rules) marked fresh
+    pending_rules: List[str] = dataclasses.field(default_factory=list)
+    versions: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def asdict(self) -> Dict[str, object]:
+        """Plain-scalar dict for service metrics / json."""
+        return dataclasses.asdict(self)
 
 
 class Daisy:
@@ -259,6 +281,117 @@ class Daisy:
                         expected_queries=self.config.expected_queries,
                     )
 
+    def _refresh_stats(self, table: str) -> None:
+        """Recompute one table's per-rule statistics after an append and
+        fold the new instance size into the existing cost models in place
+        (histories and the switched flag survive: an append changes the
+        economics of FUTURE work, not what already happened)."""
+        rel = self.db[table]
+        n = int(np.asarray(rel.num_rows()))
+        for rule in self.rules.get(table, ()):
+            key = (table, rule.name)
+            cm = self.cost.get(key)
+            if isinstance(rule, FD):
+                st = statsmod.fd_stats(rel, rule)
+                self.stats[key] = st
+                if cm is not None:
+                    cm.n, cm.df = n, float(n)
+                    cm.epsilon, cm.p = st.epsilon, st.p_est
+            else:
+                st = statsmod.dc_stats(rel, rule, p=self.config.dc_partitions)
+                self.stats[key] = st
+                if cm is not None:
+                    cm.n = n
+                    cm.df = n * n / max(self.config.dc_partitions, 1)
+                    cm.epsilon = int(st.range_vio.sum())
+
+    # ---------------------------------------------------------------- ingest
+    def ingest(self, table: str, rows: Mapping[str, np.ndarray]) -> IngestReport:
+        """Append rows into a live table — THE streaming-ingest entry point
+        (DESIGN.md §12).
+
+        Under ``lock``, in order: the rows land in the relation's spare
+        capacity (growing via ``next_pow2`` when full; every pre-existing
+        overlay/checked/cand array is preserved bit-for-bit); the table's
+        statistics and cost models refresh; and each rule scope's work
+        ledger extends — the fresh rows' strips read as COLD and FRESH,
+        with no existing checked state invalidated.  Scopes that already
+        hold checked rows queue a ``PendingIngest`` delta: the next
+        cleaning step touching the scope (foreground or background) gives
+        those rows the fresh partners' evidence in O(new x all) work
+        instead of a stop-the-world re-clean (``_process_pending``).
+
+        Cache invalidation is exact: only the table's ``TABLE_ROWS_RULE``
+        pseudo-scope version bumps here (rule scope versions move when
+        their deltas merge), so every cached answer reading this table
+        goes stale exactly once and entries over other tables survive.
+        """
+        with self._lock:
+            if table not in self.db:
+                raise KeyError(f"unknown table {table!r}")
+            rel = self.db[table]
+            cap_before = rel.capacity
+            # snapshot per-rule ingest-delta inputs BEFORE the append: which
+            # rows are checked, and (FDs) which rows were statically dirty —
+            # the had-evidence/checked-while-clean classifier (DESIGN.md §12)
+            had_checked: Dict[str, np.ndarray] = {}
+            old_dirty: Dict[str, np.ndarray] = {}
+            for rule in self.rules.get(table, ()):
+                ch = rel.checked.get(rule.name)
+                if ch is None:
+                    continue
+                ch_np = np.asarray(ch)
+                if ch_np.any():
+                    had_checked[rule.name] = ch_np
+                    if isinstance(rule, FD):
+                        st = self.stats.get((table, rule.name))
+                        dirty = (
+                            st.dirty_row if st is not None
+                            else statsmod.fd_stats(rel, rule).dirty_row
+                        )
+                        old_dirty[rule.name] = np.asarray(dirty, dtype=bool)
+            new_rel, start = append_rows(rel, rows)
+            n_new = int(np.asarray(new_rel.valid).sum()) - start
+            report = IngestReport(
+                table=table, rows=n_new, start=start,
+                capacity_before=cap_before, capacity=new_rel.capacity,
+                grown=new_rel.capacity != cap_before, fresh_strips=0,
+            )
+            if n_new == 0:
+                return report
+            self.db[table] = new_rel
+            hi = start + n_new
+            if self.config.collect_stats:
+                self._refresh_stats(table)
+            cap = new_rel.capacity
+            for rule in self.rules.get(table, ()):
+                checked = had_checked.get(rule.name)
+                od = old_dirty.get(rule.name)
+                if checked is not None and checked.shape[0] < cap:
+                    checked = np.pad(checked, (0, cap - checked.shape[0]))
+                if od is not None and od.shape[0] < cap:
+                    od = np.pad(od, (0, cap - od.shape[0]))
+                cold = np.asarray(self._cold_mask(new_rel, table, rule.name))
+                scope = self.ledger.record_ingest(
+                    table, rule.name, cap, cold, start, hi,
+                    checked=checked, old_dirty=od,
+                )
+                report.fresh_strips = max(report.fresh_strips, len(scope.fresh))
+                if scope.pending:
+                    report.pending_rules.append(rule.name)
+                cm = self.cost.get((table, rule.name))
+                if cm is not None:
+                    cm.observe_progress(scope.cold_fraction)
+            self.ledger.bump(table, TABLE_ROWS_RULE)
+            report.versions = {
+                rule.name: self.ledger.version(table, rule.name)
+                for rule in self.rules.get(table, ())
+            }
+            report.versions[TABLE_ROWS_RULE] = self.ledger.version(
+                table, TABLE_ROWS_RULE
+            )
+            return report
+
     # -------------------------------------------------------------- planning
     def _want_full(self) -> Dict[Tuple[str, str], bool]:
         if not self.config.use_cost_model:
@@ -312,13 +445,20 @@ class Daisy:
         return scope.cold_count
 
     def _fd_increment_seed(
-        self, rel: Relation, fd: FD, cold: jnp.ndarray, max_rows: Optional[int]
+        self,
+        rel: Relation,
+        fd: FD,
+        cold: jnp.ndarray,
+        max_rows: Optional[int],
+        prefer: Optional[jnp.ndarray] = None,
     ) -> jnp.ndarray:
         """Whole-lhs-group seed mask for one background FD increment: the
         first (ascending group id) cold groups whose valid rows total at
         least ``max_rows`` (always >= 1 group).  Groups are taken whole —
         candidates are per-group evidence, so a split group would merge
-        different candidate sets than the foreground path (DESIGN.md §10)."""
+        different candidate sets than the foreground path (DESIGN.md §10).
+        ``prefer`` front-loads groups intersecting that mask (the freshly
+        ingested strips, DESIGN.md §12) ahead of the ascending sweep."""
         valid = np.asarray(rel.valid)
         cold_np = np.asarray(cold)
         gid = np.zeros(valid.shape[0], dtype=np.int64)
@@ -328,6 +468,10 @@ class Daisy:
         # densify the combined key so per-group sizes are one bincount pass
         _, gid = np.unique(gid, return_inverse=True)
         cold_groups = np.unique(gid[cold_np])
+        if prefer is not None:
+            pref = np.unique(gid[np.asarray(prefer) & cold_np])
+            rest = cold_groups[~np.isin(cold_groups, pref)]
+            cold_groups = np.concatenate([pref, rest])
         if max_rows is not None:
             sizes = np.bincount(gid[valid], minlength=int(gid.max()) + 1)
             cum = np.cumsum(sizes[cold_groups])
@@ -363,13 +507,25 @@ class Daisy:
         not polluted (``record_cost=False``)."""
         with self._lock:
             rule = self._rule_named(table, rule_name)
+            report = ExecReport()
+            # ingest-deltas first (DESIGN.md §12): a scope can look warm
+            # (zero cold rows) while its checked rows are stale against
+            # fresh partners — a pending-only increment still reports.
+            pending_rep = self._process_pending(table, rule, report)
             rel = self.db[table]
             cold = self.cold_rows(table, rule_name)
             if not bool(np.asarray(jnp.any(cold))):
-                return None
-            report = ExecReport()
+                return pending_rep
             if isinstance(rule, FD):
-                seed = self._fd_increment_seed(rel, rule, cold, max_rows)
+                scope_l = self.ledger.scope(table, rule_name)
+                prefer = None
+                if scope_l is not None and scope_l.fresh:
+                    prefer = jnp.asarray(
+                        scope_l.strip_mask(sorted(scope_l.fresh))
+                    )
+                seed = self._fd_increment_seed(
+                    rel, rule, cold, max_rows, prefer=prefer
+                )
                 self._clean_fd(
                     probe_step(table, rule), report,
                     answer_override=seed, record_cost=False,
@@ -381,13 +537,165 @@ class Daisy:
                 scope = self.ledger.register(
                     table, rule_name, rel.capacity, np.asarray(cold)
                 )
-                strips = scope.cold_strips()
+                strips = scope.cold_strips(fresh_first=True)
                 if max_strips is not None:
                     strips = strips[: max(int(max_strips), 1)]
                 self._clean_dc(
                     strip_step(table, rule, strips), report, record_cost=False
                 )
-            return report.steps[0] if report.steps else None
+            return report.steps[-1] if report.steps else None
+
+    # -------------------------------------------------------- ingest deltas
+    def _process_pending(
+        self, table: str, rule, report: Optional[ExecReport] = None
+    ) -> Optional[StepReport]:
+        """Drain a scope's queued ingest-deltas (DESIGN.md §12): for every
+        append since the scope's last cleaning step, give the rows that were
+        CHECKED at append time the evidence the fresh rows owe them — an
+        O(checked x fresh) scan, never a re-clean.  Runs at the top of every
+        cleaning path (foreground steps, background increments) BEFORE any
+        skip gate, because a scope can look warm while its checked rows are
+        stale against fresh partners.  No rows are marked here: the fresh
+        rows stay cold and collect their own full evidence at their first
+        clean, so checked bits are never invalidated by an append."""
+        pendings = self.ledger.take_pending(table, rule.name)
+        if not pendings:
+            return None
+        rep = StepReport(rule.name, table, "ingest-delta")
+        if isinstance(rule, FD):
+            self._ingest_delta_fd(table, rule, pendings, rep)
+        else:
+            self._ingest_delta_dc(table, rule, pendings, rep)
+        if report is not None:
+            report.steps.append(rep)
+        return rep
+
+    def _ingest_delta_fd(
+        self, table: str, fd: FD, pendings, rep: StepReport
+    ) -> None:
+        """FD ingest-delta: re-derive candidate evidence for checked rows
+        whose lhs group gained fresh members, processing appends in time
+        order against the instance each one saw (``rows < hi`` masking
+        makes multi-append draining exact).
+
+        Per append, over the relaxation closure of the fresh rows' groups:
+
+        * checked rows that were DIRTY at append time already merged their
+          group's old evidence — they get the FRESH-WEIGHTED counts only
+          (each fresh member contributes weight 1, old members 0: by Lemma 4
+          the sum equals one merge over the whole group);
+        * checked rows that were CLEAN at append time (checked-while-clean:
+          marked by a pass whose detection saw no violation, so no overlay)
+          and are violated NOW get the FULL group counts — their first and
+          only evidence merge, identical to what a from-scratch clean gives.
+
+        Zero-weight candidate slots merge as bitwise no-ops, so rows whose
+        group gained nothing are untouched."""
+        k = self.config.k
+        for ent in pendings:
+            rel = self.db[table]
+            cap = rel.capacity
+            pos = np.arange(cap)
+            checked = np.zeros(cap, dtype=bool)
+            c = np.asarray(ent.checked, dtype=bool)
+            checked[: min(c.shape[0], cap)] = c[:cap]
+            dirty = np.zeros(cap, dtype=bool)
+            if ent.old_dirty is not None:
+                d = np.asarray(ent.old_dirty, dtype=bool)
+                dirty[: min(d.shape[0], cap)] = d[:cap]
+            fresh = jnp.asarray((pos >= ent.lo) & (pos < ent.hi))
+            # the instance THIS append saw: rows below its high-water mark
+            rel_hi = dataclasses.replace(
+                rel, valid=rel.valid & jnp.asarray(pos < ent.hi)
+            )
+            seed = fresh & rel_hi.valid
+            if not bool(np.asarray(jnp.any(seed))):
+                continue
+            self.detect_calls += 1
+            res = relax_fd(
+                rel_hi, seed, fd,
+                max_iters=self.config.max_relax_iters, use_rhs=True,
+            )
+            scope = (seed | res.extra) & rel_hi.valid
+            scope_n = int(np.asarray(jnp.sum(scope)))
+            rep.answer_size += int(np.asarray(jnp.sum(seed)))
+            rep.extra += int(np.asarray(jnp.sum(res.extra)))
+            rep.detect_pairs += scope_n  # group-by is O(scope)
+            self.detect_pairs += scope_n
+            lhs_cols = [rel.columns[a] for a in fd.lhs]
+            rhs_col = rel.columns[fd.rhs]
+            wt = jnp.where(fresh, jnp.float32(1.0), jnp.float32(0.0))
+            full_v, full_n, violated, _ = group_distinct_candidates(
+                lhs_cols, rhs_col, scope, k
+            )
+            fresh_v, fresh_n, _, _ = group_distinct_candidates(
+                lhs_cols, rhs_col, scope, k, weight=wt
+            )
+            lhs_single = len(fd.lhs) == 1
+            if lhs_single:
+                lfull_v, lfull_n, _, _ = group_distinct_candidates(
+                    [rhs_col], lhs_cols[0], scope, k
+                )
+                lfresh_v, lfresh_n, _, _ = group_distinct_candidates(
+                    [rhs_col], lhs_cols[0], scope, k, weight=wt
+                )
+            checked_j = jnp.asarray(checked)
+            t_fresh = checked_j & violated & jnp.asarray(dirty) & scope
+            t_full = checked_j & violated & ~jnp.asarray(dirty) & scope
+            kinds = jnp.zeros(full_v.shape, jnp.int8)
+            deltas = []
+            for rows_mask, rv, rn, lv, ln in (
+                (t_fresh, fresh_v, fresh_n,
+                 *((lfresh_v, lfresh_n) if lhs_single else (None, None))),
+                (t_full, full_v, full_n,
+                 *((lfull_v, lfull_n) if lhs_single else (None, None))),
+            ):
+                if not bool(np.asarray(jnp.any(rows_mask))):
+                    continue
+                deltas.append((fd.rhs, Candidates(rv, rn, kinds, rows_mask)))
+                if lv is not None:
+                    deltas.append((fd.lhs[0], Candidates(lv, ln, kinds, rows_mask)))
+            if deltas:
+                self.repair_calls += 1
+                rep.repaired += int(np.asarray(jnp.sum(t_fresh | t_full)))
+                self.db[table] = self._apply(rel, deltas, table, fd.name)
+
+    def _ingest_delta_dc(
+        self, table: str, dc: DC, pendings, rep: StepReport
+    ) -> None:
+        """DC ingest-delta: one [checked x fresh] matrix strip per append —
+        rows already marked checked absorb the appended partners' evidence
+        through the col-scoped kernel entry, O(checked x new) pairs instead
+        of the O(n^2) full grid.  The fresh rows themselves stay cold: their
+        own [fresh x all] evidence arrives at their first (strip or full)
+        clean, which — both scopes living below the append's high-water
+        mark — never re-touches a checked strip (benchmark gate (c))."""
+        block = self.config.dc_block
+        cm = self.cost.get((table, dc.name))
+        for ent in pendings:
+            rel = self.db[table]
+            cap = rel.capacity
+            pos = np.arange(cap)
+            checked = np.zeros(cap, dtype=bool)
+            c = np.asarray(ent.checked, dtype=bool)
+            checked[: min(c.shape[0], cap)] = c[:cap]
+            fresh = jnp.asarray((pos >= ent.lo) & (pos < ent.hi))
+            row_scope = jnp.asarray(checked) & rel.valid
+            if not bool(np.asarray(jnp.any(row_scope & rel.valid))):
+                continue
+            row_blocks = self._covering_blocks(row_scope)
+            col_blocks = (ent.lo // block, -(-ent.hi // block))
+            rep.answer_size += int(np.asarray(jnp.sum(fresh & rel.valid)))
+            # dense scan only: the sharded path has no partner-side
+            # restriction, and a delta is small by construction
+            rel, det = self._dc_detect_repair(
+                rel, dc, row_scope, fresh, row_blocks, None, cm, rep,
+                col_blocks=col_blocks,
+            )
+            rep.repaired += int(np.asarray(jnp.sum(
+                ((det.t1_count > 0) | (det.t2_count > 0)) & row_scope
+            )))
+            self.db[table] = rel
 
     # ------------------------------------------------------------- FD steps
     def _clean_fd(
@@ -404,6 +712,7 @@ class Daisy:
         would); ``record_cost=False`` keeps background work out of the
         per-query cost-model history."""
         table, fd = step.table, step.rule
+        self._process_pending(table, fd, report)
         rel = self.db[table]
         cm = self.cost.get((table, fd.name))
         st = self.stats.get((table, fd.name))
@@ -471,7 +780,7 @@ class Daisy:
         self.detect_calls += 1
         rep.detect_pairs = int(np.asarray(jnp.sum(scope)))  # group-by is O(scope)
         self.detect_pairs += rep.detect_pairs
-        det, sinfo = detect_fd_auto_info(
+        det, sinfo = detect_auto(
             rel, fd, scope, k=self.config.k,
             mesh=mesh, n_shards=self.config.detect_shards,
             strip_rows=self.ledger.strip_rows,
@@ -505,22 +814,25 @@ class Daisy:
 
     # ------------------------------------------------------------- DC steps
     def _dc_detect_repair(
-        self, rel, dc, row_scope, col_scope, row_blocks, mesh, cm, rep
+        self, rel, dc, row_scope, col_scope, row_blocks, mesh, cm, rep,
+        col_blocks=None,
     ):
         """One detect + repair-candidate pass of the DC increment engine:
-        scan ``row_scope x col_scope`` (strip-scoped to ``row_blocks`` when
-        given), merge the role fixes for ``row_scope`` rows, account the
-        scanned comparison space.  Returns ``(rel, detect_result)``."""
+        scan ``row_scope x col_scope`` (strip-scoped to ``row_blocks`` /
+        ``col_blocks`` when given), merge the role fixes for ``row_scope``
+        rows, account the scanned comparison space.  Returns
+        ``(rel, detect_result)``."""
         table = rep.table
         self.detect_calls += 1
         rows = int(np.asarray(jnp.sum(row_scope & rel.valid)))
         cols = int(np.asarray(jnp.sum(col_scope & rel.valid)))
         rep.detect_pairs += rows * cols
         self.detect_pairs += rows * cols
-        det, sinfo = detect_dc_auto_info(
+        det, sinfo = detect_auto(
             rel, dc, row_scope, col_scope, block=self.config.dc_block,
             mesh=mesh, n_shards=self.config.detect_shards,
-            row_blocks=row_blocks, strip_rows=self.ledger.strip_rows,
+            row_blocks=row_blocks, col_blocks=col_blocks,
+            strip_rows=self.ledger.strip_rows,
         )
         if sinfo is not None:
             rep.detect_path = "sharded"
@@ -564,6 +876,7 @@ class Daisy:
         cost-model history (a scope-completing sweep still marks the rule
         switched: after it, nothing is left for the switch to buy)."""
         table, dc = step.table, step.rule
+        self._process_pending(table, dc, report)
         rel = self.db[table]
         key = (table, dc.name)
         cm = self.cost.get(key)

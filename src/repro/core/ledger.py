@@ -44,6 +44,13 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+# Pseudo-rule naming a table's ROW COUNT as a cache-version coordinate:
+# ``Daisy.ingest`` bumps (table, TABLE_ROWS_RULE) so cached answers over a
+# grown table go stale even when they overlap no cleaning rule (DESIGN.md
+# §12).  Cleaning commits never bump it, so rule-free entries survive all
+# background cleaning — invalidation stays exact.
+TABLE_ROWS_RULE = "__rows__"
+
 
 def resolve_strip_rows(strip_rows: Optional[int], block: int) -> int:
     """Align the configured strip size to the detect tile grid: at least
@@ -56,10 +63,33 @@ def resolve_strip_rows(strip_rows: Optional[int], block: int) -> int:
 
 
 @dataclasses.dataclass
+class PendingIngest:
+    """One ingest's unprocessed delta against a scope's CHECKED rows
+    (DESIGN.md §12).  Fresh rows occupy ``[lo, hi)``; ``checked``
+    snapshots which rows were already checked for the rule when the
+    append landed (those rows' overlays must absorb the fresh partners'
+    evidence without being re-scanned); ``old_dirty`` (FDs only)
+    snapshots which rows were statically dirty BEFORE the append — it
+    classifies checked rows into "has full old evidence" (merge
+    fresh-weighted counts) versus "checked while clean, no evidence"
+    (merge full counts).  Entries are processed in append order: each is
+    evaluated against rows ``< hi`` only, so a later append's rows never
+    leak into an earlier delta."""
+
+    lo: int
+    hi: int
+    checked: np.ndarray  # (cap,) bool host snapshot at append time
+    old_dirty: Optional[np.ndarray] = None  # (cap,) bool, FD scopes only
+
+
+@dataclasses.dataclass
 class StripLedger:
     """Work ledger for ONE (table, rule) scope: per-strip cold-row counts
     plus the scope's monotone version (see the module docstring for the
-    locking and soundness contracts)."""
+    locking and soundness contracts).  Since DESIGN.md §12 it also owns
+    the scope's ingest state: which strips hold FRESH rows (recent data
+    is hot data — the background cleaner's priority signal) and the
+    pending ingest-deltas the next cleaning step must process."""
 
     table: str
     rule: str
@@ -67,6 +97,8 @@ class StripLedger:
     strip_rows: int
     version: int = 0
     cold_per_strip: np.ndarray = dataclasses.field(default=None)  # (n_strips,) int64
+    fresh: set = dataclasses.field(default_factory=set)  # strip ids with fresh rows
+    pending: List[PendingIngest] = dataclasses.field(default_factory=list)
 
     def __post_init__(self):
         if self.cold_per_strip is None:
@@ -123,9 +155,37 @@ class StripLedger:
         detection (``CostModel.remaining_full_clean_cost``)."""
         return 1.0 - self.support
 
-    def cold_strips(self) -> np.ndarray:
-        """Ascending ids of strips that still hold cold rows."""
-        return np.flatnonzero(self.cold_per_strip > 0)
+    def cold_strips(self, fresh_first: bool = False) -> np.ndarray:
+        """Ids of strips that still hold cold rows, ascending — or, with
+        ``fresh_first``, fresh strips ahead of stale ones (each group
+        ascending): the background cleaner's recent-data-is-hot-data
+        ordering (DESIGN.md §12)."""
+        cold = np.flatnonzero(self.cold_per_strip > 0)
+        if not fresh_first or not self.fresh:
+            return cold
+        is_fresh = np.isin(cold, sorted(self.fresh))
+        return np.concatenate([cold[is_fresh], cold[~is_fresh]])
+
+    @property
+    def fresh_cold_count(self) -> int:
+        """Cold rows sitting in fresh strips (the ingest-priority signal)."""
+        if not self.fresh:
+            return 0
+        ids = [s for s in self.fresh if s < self.n_strips]
+        return int(self.cold_per_strip[ids].sum()) if ids else 0
+
+    def note_fresh(self, lo: int, hi: int) -> None:
+        """Mark the strips overlapping row range [lo, hi) as fresh."""
+        if hi > lo:
+            self.fresh.update(range(lo // self.strip_rows,
+                                    -(-hi // self.strip_rows)))
+
+    def prune_fresh(self) -> None:
+        """Drop fresh flags on strips that no longer hold cold rows —
+        called after commits so the priority signal decays as the fresh
+        data gets cleaned."""
+        self.fresh = {s for s in self.fresh
+                      if s < self.n_strips and self.cold_per_strip[s] > 0}
 
     # -------------------------------------------------------------- commits
     def bump(self) -> None:
@@ -213,6 +273,48 @@ class WorkLedger:
         scope = self.register(table, rule, cold.shape[0])
         scope.bump()
         scope.observe_cold(cold)
+        scope.prune_fresh()
+
+    def record_ingest(
+        self,
+        table: str,
+        rule: str,
+        capacity: int,
+        cold: np.ndarray,
+        lo: int,
+        hi: int,
+        checked: Optional[np.ndarray] = None,
+        old_dirty: Optional[np.ndarray] = None,
+    ) -> StripLedger:
+        """Fold one append into a rule scope (DESIGN.md §12): extend the
+        strip grid to the (possibly grown) capacity, replace the cold
+        counts with the post-append mask, mark the strips holding rows
+        [lo, hi) fresh, and — when any row was already checked — queue a
+        ``PendingIngest`` delta for the next cleaning step.  Does NOT
+        bump the scope version: ingest by itself changes no overlay or
+        checked bit; the versions move when the delta is processed."""
+        scope = self.register(table, rule, capacity, cold=cold)
+        scope.note_fresh(lo, hi)
+        if checked is not None and bool(np.asarray(checked).any()):
+            scope.pending.append(
+                PendingIngest(lo=lo, hi=hi, checked=np.asarray(checked, dtype=bool),
+                              old_dirty=old_dirty)
+            )
+        return scope
+
+    def take_pending(self, table: str, rule: str) -> List[PendingIngest]:
+        """Claim (and clear) a scope's queued ingest-deltas, append order.
+        The caller owns processing them under the executor lock."""
+        scope = self._scopes.get((table, rule))
+        if scope is None or not scope.pending:
+            return []
+        out, scope.pending = scope.pending, []
+        return out
+
+    def has_pending(self, table: str, rule: str) -> bool:
+        """True when the scope has unprocessed ingest-deltas."""
+        scope = self._scopes.get((table, rule))
+        return scope is not None and bool(scope.pending)
 
     # ------------------------------------------------------------- progress
     def cold_count(self, table: str, rule: str) -> int:
@@ -225,7 +327,10 @@ class WorkLedger:
 
     def progress(self) -> Dict[str, Dict[str, int]]:
         """JSON-serializable per-scope progress: strips done / total plus
-        remaining cold rows (exported by ``service.metrics`` snapshots)."""
+        remaining cold rows (exported by ``service.metrics`` snapshots).
+        Capacity-0 scopes — version-only coordinates like the
+        ``TABLE_ROWS_RULE`` pseudo-rule — carry no strip grid and are
+        skipped."""
         return {
             f"{s.table}/{s.rule}": {
                 "strips_done": s.strips_done,
@@ -233,4 +338,5 @@ class WorkLedger:
                 "cold_rows": s.cold_count,
             }
             for s in self._scopes.values()
+            if s.capacity > 0
         }

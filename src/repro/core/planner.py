@@ -119,6 +119,13 @@ def plan_query(
         for rule in rules.get(table, ()):  # planner preserves rule order
             if not overlaps_query(rule, attrs):
                 continue
+            if ledger is not None and ledger.has_pending(table, rule.name):
+                # the executor drains queued ingest-deltas at the top of
+                # every cleaning step (DESIGN.md §12); surface it in the plan
+                notes.append(
+                    f"{rule.name}@{table}: ingest-delta pending "
+                    "(drained before this step)"
+                )
             full = want_full.get((table, rule.name), False)
             shardable = bool(equality_key_attrs(rule))
             if isinstance(rule, FD):

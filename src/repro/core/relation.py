@@ -271,6 +271,104 @@ def make_relation(
     return Relation(columns, valid, cand, ccount, ckind, orig, checked)
 
 
+def _pad_value(dtype) -> object:
+    return np.float32(np.nan) if dtype == jnp.float32 else SENTINEL
+
+
+def _grow_relation(rel: Relation, capacity: int) -> Relation:
+    """Re-pad every array of ``rel`` to ``capacity`` rows.
+
+    The first ``rel.capacity`` rows of every array are carried over
+    bit-for-bit (overlay counts, kinds, checked flags, provenance); the
+    new tail gets exactly the spare-row state ``make_relation`` would have
+    produced: pad values in columns/orig, ``valid=False``, empty overlay
+    with candidate slot 0 mirroring the (pad) column value, and unchecked.
+    """
+    old = rel.capacity
+    if capacity < old:
+        raise ValueError(f"cannot shrink capacity {old} -> {capacity}")
+    if capacity == old:
+        return rel
+    extra = capacity - old
+    k = rel.k
+
+    def pad1(arr, fill):
+        tail = jnp.full((extra,), fill, dtype=arr.dtype)
+        return jnp.concatenate([arr, tail])
+
+    columns = {n: pad1(c, _pad_value(c.dtype)) for n, c in rel.columns.items()}
+    valid = pad1(rel.valid, False)
+    cand, ccount, ckind, orig = {}, {}, {}, {}
+    for name, cv in rel.cand.items():
+        pad = _pad_value(cv.dtype)
+        tail = jnp.zeros((extra, k), dtype=cv.dtype).at[:, 0].set(pad)
+        cand[name] = jnp.concatenate([cv, tail])
+        ccount[name] = jnp.concatenate(
+            [rel.ccount[name], jnp.zeros((extra, k), dtype=jnp.float32)]
+        )
+        ckind[name] = jnp.concatenate(
+            [rel.ckind[name], jnp.zeros((extra, k), dtype=jnp.int8)]
+        )
+        orig[name] = pad1(rel.orig[name], pad)
+    checked = {r: pad1(c, False) for r, c in rel.checked.items()}
+    return Relation(columns, valid, cand, ccount, ckind, orig, checked)
+
+
+def append_rows(rel: Relation, data: Mapping[str, np.ndarray]) -> Tuple[Relation, int]:
+    """Append host rows into a relation's spare capacity (DESIGN.md §12).
+
+    ``data`` must provide exactly the relation's columns.  Rows land at
+    the end of the valid prefix (``valid`` stays a prefix mask, the
+    invariant every strip/ledger computation relies on); when the spare
+    capacity runs out the relation grows to ``next_pow2`` of the needed
+    row count, preserving all pre-existing overlay/checked/cand state
+    bit-for-bit.  Fresh rows start exactly like ``make_relation`` rows:
+    certain (empty overlay, candidate slot 0 = the value), unchecked for
+    every rule, with ``orig`` provenance equal to the ingested value.
+
+    Returns ``(new_relation, start)`` where ``start`` is the row index of
+    the first appended row.  Pure — the input relation is not mutated.
+    """
+    names = set(rel.columns)
+    if set(data) != names:
+        raise ValueError(
+            f"ingest columns {sorted(data)} != relation columns {sorted(names)}"
+        )
+    arrays = {n: np.asarray(v) for n, v in data.items()}
+    lengths = {len(a) for a in arrays.values()}
+    if len(lengths) != 1:
+        raise ValueError(f"ragged ingest batch: column lengths {sorted(lengths)}")
+    n_new = lengths.pop()
+    if n_new == 0:
+        return rel, int(np.asarray(rel.valid).sum())
+
+    start = int(np.asarray(rel.valid).sum())
+    needed = start + n_new
+    if needed > rel.capacity:
+        rel = _grow_relation(rel, next_pow2(needed))
+    stop = start + n_new
+
+    columns = dict(rel.columns)
+    for name, arr in arrays.items():
+        col = columns[name]
+        if col.dtype == jnp.float32:
+            vals = jnp.asarray(arr.astype(np.float32))
+        else:
+            if arr.dtype.kind not in "iu":
+                raise ValueError(f"column {name!r} expects integer values")
+            vals = jnp.asarray(arr.astype(np.int32))
+        columns[name] = col.at[start:stop].set(vals)
+    valid = rel.valid.at[start:stop].set(True)
+    cand, orig = dict(rel.cand), dict(rel.orig)
+    for name in rel.cand:
+        cand[name] = cand[name].at[start:stop, 0].set(columns[name][start:stop])
+        orig[name] = orig[name].at[start:stop].set(columns[name][start:stop])
+    return (
+        Relation(columns, valid, cand, dict(rel.ccount), dict(rel.ckind), orig, rel.checked),
+        start,
+    )
+
+
 def masked_keys(values: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
     """Replace masked-out entries with the sort sentinel."""
     if values.dtype == jnp.float32:

@@ -68,8 +68,16 @@ def _role_candidates(
     scope: jnp.ndarray,
     k: int,
 ):
-    """Original-value + range-fix candidate pair per violated inequality atom."""
+    """Original-value + range-fix candidate pair per violated inequality atom.
+
+    Both slots carry the row's violating-PAIR count for this role (not a
+    per-merge constant), so the {orig, range} pair stays Example 4's 50/50
+    within a role AND a partitioned scan — partner strips, the ingest
+    delta's [checked x fresh] pass (DESIGN.md §12) — merges to exactly the
+    counts one full scan produces: pair counts sum over partner partitions,
+    and same-kind range bounds coalesce to the tightest (update.py)."""
     rows = (count > 0) & scope & rel.valid
+    weight = count.astype(jnp.float32)
     out = []
     for attr, op, stat in zip(attrs, ops, stats):
         if op not in _FIX_KIND:
@@ -81,7 +89,7 @@ def _role_candidates(
         kinds = jnp.zeros((cap, k), jnp.int8)
         values = values.at[:, 0].set(col)  # original value
         values = values.at[:, 1].set(stat.astype(col.dtype))  # range bound
-        counts = counts.at[:, 0].set(1.0).at[:, 1].set(1.0)
+        counts = counts.at[:, 0].set(weight).at[:, 1].set(weight)
         kinds = kinds.at[:, 1].set(_FIX_KIND[op])
         out.append((attr, Candidates(values, counts, kinds, rows)))
     return out

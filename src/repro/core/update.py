@@ -6,10 +6,11 @@ delta to the original dataset" — here the delta is a set of per-attribute
 (donated buffers give true in-place on TPU).
 
 ``merge_candidates`` implements the Lemma-4 merge: the union of two candidate
-sets with counts summed for identical (value, kind) pairs — commutative and
-associative by construction, property-tested in tests/test_properties.py.
-Overflow beyond the K overlay slots keeps the K heaviest candidates
-(DESIGN.md §2 assumption (a)).
+sets with counts summed for identical (value, kind) pairs, and same-kind
+range candidates coalesced to the tighter bound (see ``_dedupe_sum``) —
+commutative and associative by construction, property-tested in
+tests/test_properties.py.  Overflow beyond the K overlay slots keeps the K
+heaviest candidates (DESIGN.md §2 assumption (a)).
 """
 
 from __future__ import annotations
@@ -26,20 +27,45 @@ from repro.core.repair import Candidates
 
 
 def _dedupe_sum(values, counts, kinds):
-    """Per-row: sum counts of identical (value, kind) slots, zeroing dups.
+    """Per-row: merge duplicate slots, zeroing the absorbed one.
 
-    O(K^2) slot-pair comparisons, vectorized over rows — K is small (<=16).
-    Empty slots (count 0) never match anything.
+    Two slots merge when they denote the same candidate *world set*:
+
+    * identical ``(value, kind)`` pairs — counts summed (Lemma 4's union
+      with multiplicity);
+    * same-kind RANGE candidates (``CAND_LT``/``CAND_GT``) over the same
+      attribute — counts summed and the bound *tightened* (max for GT,
+      min for LT).  A range fix must invert its atom against every known
+      violating partner (Example 4): keeping the looser of two bounds
+      would admit still-violating worlds, and tightening is what makes a
+      partner scan decomposable over row partitions (the bound over
+      old ∪ fresh rows is exactly max/min of the per-partition bounds —
+      the ingest-delta exactness argument, DESIGN.md §12).  max/min are
+      commutative/associative, so the Lemma-4 merge laws survive.
+
+    O(K^2) slot-pair comparisons, vectorized over rows — K is small
+    (<=16).  Empty slots (count 0) never match anything.  Returns the
+    merged ``(values, counts)`` (kinds are unchanged: a merge only ever
+    happens between same-kind slots).
     """
     k2 = values.shape[1]
+    out_values = values
     out_counts = counts
     for i in range(k2):
         for j in range(i + 1, k2):
-            same = (
-                (values[:, i] == values[:, j])
-                & (kinds[:, i] == kinds[:, j])
-                & (out_counts[:, i] > 0)
-                & (out_counts[:, j] > 0)
+            alive = (out_counts[:, i] > 0) & (out_counts[:, j] > 0)
+            same_kind = kinds[:, i] == kinds[:, j]
+            is_range = kinds[:, i] != 0  # CAND_LT / CAND_GT
+            same = alive & same_kind & (
+                is_range | (out_values[:, i] == out_values[:, j])
+            )
+            tighter = jnp.where(
+                kinds[:, i] == 2,  # CAND_GT: (bound, +inf) — keep the max bound
+                jnp.maximum(out_values[:, i], out_values[:, j]),
+                jnp.minimum(out_values[:, i], out_values[:, j]),
+            )
+            out_values = out_values.at[:, i].set(
+                jnp.where(same & is_range, tighter, out_values[:, i])
             )
             out_counts = out_counts.at[:, i].set(
                 jnp.where(same, out_counts[:, i] + out_counts[:, j], out_counts[:, i])
@@ -47,7 +73,7 @@ def _dedupe_sum(values, counts, kinds):
             out_counts = out_counts.at[:, j].set(
                 jnp.where(same, 0.0, out_counts[:, j])
             )
-    return out_counts
+    return out_values, out_counts
 
 
 @functools.partial(jax.jit, static_argnums=(6,))
@@ -62,7 +88,7 @@ def merge_candidates(
     values = jnp.concatenate([a_values, b_values], axis=1)
     counts = jnp.concatenate([a_counts, b_counts], axis=1)
     kinds = jnp.concatenate([a_kinds, b_kinds], axis=1)
-    counts = _dedupe_sum(values, counts, kinds)
+    values, counts = _dedupe_sum(values, counts, kinds)
     # top-k by count (stable: ties keep lower slot first)
     order = jnp.argsort(-counts, axis=1, stable=True)[:, :k]
     rows = jnp.arange(values.shape[0])[:, None]

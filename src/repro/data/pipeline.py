@@ -17,13 +17,13 @@ qualifying candidates; ``threshold`` mode keeps docs whose mass exceeds tau.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+from typing import Dict, Iterable, Iterator, List, Mapping, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.constraints import FD
-from repro.core.executor import Daisy, DaisyConfig
+from repro.core.executor import Daisy, DaisyConfig, IngestReport
 from repro.core.operators import Pred, Query
 from repro.core.relation import make_relation
 from repro.data.generators import DirtyDataset, token_metadata_relation
@@ -98,6 +98,34 @@ class CleanDataPipeline:
             else:
                 mass *= _np_op(np.asarray(rel.columns[p.col]), p.op, p.value)
         return mass
+
+    # --------------------------------------------------------------- streaming
+    def ingest_docs(self, data: Mapping[str, np.ndarray]) -> IngestReport:
+        """Append a chunk of new docs into the live metadata relation
+        through ``Daisy.ingest`` (DESIGN.md §12): the rows arrive dirty and
+        cold, later batch requests clean them on demand exactly like the
+        seed corpus, and rows already checked absorb the newcomers'
+        evidence through the queued ingest-deltas.  Per-doc token seeds
+        extend deterministically, so a doc's synthetic tokens are the same
+        whether it arrived in the seed corpus or mid-training."""
+        report = self.daisy.ingest("docs", data)
+        max_id = int(np.max(np.asarray(data["doc_id"]))) + 1 if report.rows else 0
+        if max_id > len(self._doc_seed):
+            ids = np.arange(len(self._doc_seed), max_id, dtype=np.int64)
+            self._doc_seed = np.concatenate(
+                [self._doc_seed, ids * 2654435761 % (2**31)]
+            )
+        return report
+
+    def stream_corpus(
+        self, chunks: Iterable[Mapping[str, np.ndarray]]
+    ) -> Iterator[IngestReport]:
+        """Chunked streaming-ingest source: feed corpus growth through the
+        pipeline one chunk at a time, yielding each chunk's
+        ``IngestReport``.  Interleave with ``batches`` to train over a
+        corpus that grows (and gradually cleans itself) mid-run."""
+        for chunk in chunks:
+            yield self.ingest_docs(chunk)
 
     # ---------------------------------------------------------------- batches
     def batches(

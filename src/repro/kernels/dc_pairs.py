@@ -74,6 +74,7 @@ def _kernel(
     bm: int,
     bn: int,
     row_lo: int,
+    col_lo: int,
     *refs,
 ):
     n_atoms = len(ops)
@@ -117,13 +118,15 @@ def _kernel(
 
     @pl.when(possible)
     def _compute():
-        # row ids are GLOBAL row indices: a strip-scoped launch (row_lo > 0)
-        # shifts the grid but the diagonal exclusion still compares against
-        # the untranslated column ids.
+        # row/col ids are GLOBAL indices: a strip-scoped launch (row_lo or
+        # col_lo > 0) shifts the grid but the diagonal exclusion still
+        # compares untranslated positions.
         row_ids = (row_lo + i) * bm + jax.lax.broadcasted_iota(
             jnp.int32, (bm, bn), 0
         )
-        col_ids = j * bn + jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1)
+        col_ids = (col_lo + j) * bn + jax.lax.broadcasted_iota(
+            jnp.int32, (bm, bn), 1
+        )
         viol = (
             (rs[...] > 0)[:, None]
             & (cs[...] > 0)[None, :]
@@ -153,6 +156,7 @@ def dc_role_scan_pallas(
     block: int = 256,
     interpret: bool = False,
     row_blocks: Optional[Tuple[int, int]] = None,
+    col_blocks: Optional[Tuple[int, int]] = None,
 ) -> Tuple[jnp.ndarray, List[jnp.ndarray]]:
     """Blocked theta-join violation scan (see module docstring).
 
@@ -163,6 +167,11 @@ def dc_role_scan_pallas(
     comparison matrix — so a strip scan costs ``(hi - lo) * nb`` tiles
     instead of the ``nb * nb`` full grid.  Rows outside the launched range
     get count 0 and the reduce identity, exactly as if they were scoped out.
+
+    ``col_blocks=(lo, hi)`` symmetrically restricts the PARTNER grid
+    dimension — the ingest-delta entry (DESIGN.md §12): checked rows scan
+    only the fresh column strip, ``nrb * (hi - lo)`` tiles.  Partners
+    outside the range simply never contribute, as if scoped out.
     """
     n_atoms = len(ops)
     n = l_cols[0].shape[0]
@@ -173,6 +182,10 @@ def dc_role_scan_pallas(
     if not (0 <= row_lo < row_hi <= nb):
         raise ValueError(f"row_blocks {row_blocks!r} outside grid [0, {nb})")
     nrb = row_hi - row_lo
+    col_lo, col_hi = (0, nb) if col_blocks is None else col_blocks
+    if not (0 <= col_lo < col_hi <= nb):
+        raise ValueError(f"col_blocks {col_blocks!r} outside grid [0, {nb})")
+    ncb = col_hi - col_lo
 
     def pad1(x, fill=0):
         return jnp.pad(x, (0, npad - n), constant_values=fill)
@@ -198,9 +211,9 @@ def dc_role_scan_pallas(
     # the launched range (Pallas leaves unvisited output blocks undefined,
     # so the full-width result is stitched back on the host side below).
     row_spec = pl.BlockSpec((bm,), lambda i, j: (row_lo + i,))
-    col_spec = pl.BlockSpec((bn,), lambda i, j: (j,))
+    col_spec = pl.BlockSpec((bn,), lambda i, j: (col_lo + j,))
     bound_i = pl.BlockSpec((1,), lambda i, j: (row_lo + i,))
-    bound_j = pl.BlockSpec((1,), lambda i, j: (j,))
+    bound_j = pl.BlockSpec((1,), lambda i, j: (col_lo + j,))
     out_spec = pl.BlockSpec((bm,), lambda i, j: (i,))
 
     in_specs = (
@@ -218,11 +231,11 @@ def dc_role_scan_pallas(
     ]
 
     kernel = functools.partial(
-        _kernel, tuple(ops), tuple(reduces), bm, bn, row_lo
+        _kernel, tuple(ops), tuple(reduces), bm, bn, row_lo, col_lo
     )
     outs = pl.pallas_call(
         kernel,
-        grid=(nrb, nb),
+        grid=(nrb, ncb),
         in_specs=in_specs,
         out_specs=out_specs,
         out_shape=out_shape,

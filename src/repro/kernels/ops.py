@@ -42,14 +42,17 @@ def dc_role_scan(
     block: int = 256,
     force: str | None = None,
     row_blocks: Tuple[int, int] | None = None,
+    col_blocks: Tuple[int, int] | None = None,
 ) -> Tuple[jnp.ndarray, List[jnp.ndarray]]:
     """``row_blocks=(lo, hi)`` launches only that strip of row blocks — the
-    partition-strip entry the work ledger schedules (DESIGN.md §11)."""
+    partition-strip entry the work ledger schedules (DESIGN.md §11).
+    ``col_blocks`` is the symmetric partner-side restriction: the
+    ingest-delta entry scanning against only fresh rows (DESIGN.md §12)."""
     mode = _mode(force)
     if mode == "ref":
         return ref.dc_role_scan(
             l_cols, r_cols, ops, row_scope, col_scope, reduces, block=block,
-            row_blocks=row_blocks,
+            row_blocks=row_blocks, col_blocks=col_blocks,
         )
     return dc_role_scan_pallas(
         l_cols,
@@ -61,6 +64,7 @@ def dc_role_scan(
         block=block,
         interpret=(mode == "interpret"),
         row_blocks=row_blocks,
+        col_blocks=col_blocks,
     )
 
 

@@ -55,6 +55,7 @@ def dc_role_scan(
     reduces: Sequence[str],
     block: int = 256,
     row_blocks: Tuple[int, int] | None = None,
+    col_blocks: Tuple[int, int] | None = None,
 ) -> Tuple[jnp.ndarray, List[jnp.ndarray]]:
     """Oracle for the ``dc_pairs`` theta-join kernel (one role).
 
@@ -70,6 +71,11 @@ def dc_role_scan(
     ``[lo * block, hi * block)`` (DESIGN.md §11): only that row slice is
     scanned against every column tile; rows outside take count 0 and the
     reduce identity, exactly as the full scan gives scoped-out rows.
+
+    ``col_blocks=(lo, hi)`` symmetrically restricts the PARTNER side to
+    that block range — the ingest-delta entry (DESIGN.md §12): scanning
+    checked rows against only the freshly-appended column strip makes the
+    delta cost O(checked x fresh) instead of O(checked x n).
     """
     n = l_cols[0].shape[0]
     nb = -(-n // block)
@@ -79,6 +85,11 @@ def dc_role_scan(
         if not (0 <= lo < hi <= nb):
             raise ValueError(f"row_blocks {row_blocks!r} outside grid [0, {nb})")
         lo_row, hi_row = lo * block, min(hi * block, n)
+    lo_cb, hi_cb = 0, nb
+    if col_blocks is not None:
+        lo_cb, hi_cb = col_blocks
+        if not (0 <= lo_cb < hi_cb <= nb):
+            raise ValueError(f"col_blocks {col_blocks!r} outside grid [0, {nb})")
     pad = nb * block - n
     rs = row_scope[lo_row:hi_row]
     l_cols = [c[lo_row:hi_row] for c in l_cols]
@@ -117,7 +128,7 @@ def dc_role_scan(
         jnp.zeros((m,), jnp.int32),
         tuple(jnp.full((m,), idents[a], r_cols[a].dtype) for a in range(len(ops))),
     )
-    count, stats = jax.lax.fori_loop(0, nb, body, init)
+    count, stats = jax.lax.fori_loop(lo_cb, hi_cb, body, init)
     if row_blocks is None:
         return count, list(stats)
     # stitch the strip back into full-width outputs (unscanned rows get the

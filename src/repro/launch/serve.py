@@ -23,14 +23,73 @@ Two workloads share this entry point:
       PYTHONPATH=src python -m repro.launch.serve --workload queries \\
           --sessions 8 --requests 40 --rows 2048 --background \\
           --increment-rows 256 --increment-strips 2
+
+  ``--ingest-chunks``/``--ingest-rows`` turn it into ingest-while-serving
+  (DESIGN.md §12): that many rows are held back from the seed instance and
+  streamed through ``QueryServer.ingest`` between query bursts:
+
+      PYTHONPATH=src python -m repro.launch.serve --workload queries \\
+          --rows 2048 --ingest-chunks 4 --ingest-rows 128
+
+All query-workload knobs live in ONE ``ServeOptions`` bundle shared with
+examples/serve_queries.py and the serving benchmarks.
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import numpy as np
+
+
+@dataclasses.dataclass
+class ServeOptions:
+    """The query-serving workload knobs, consolidated: one bundle shared by
+    the CLI driver (``--workload queries``), the quickstart example
+    (examples/serve_queries.py), and the serving benchmarks
+    (benchmarks/serve_bg_warmup.py, benchmarks/serve_ingest.py), so each
+    knob means the same thing everywhere it appears.
+
+    ``ingest_chunks`` x ``ingest_rows`` rows are held back from the seed
+    instance and streamed through ``QueryServer.ingest`` between query
+    bursts — the ingest-while-serving workload (DESIGN.md §12).  Zero
+    (the default) serves a fixed instance."""
+
+    sessions: int = 4
+    requests: int = 40
+    rows: int = 1024
+    max_batch: int = 8
+    background: bool = False
+    increment_rows: int = 0  # 0 -> rows // 8 (min 64); whole FD lhs groups
+    increment_strips: int = 1  # work-ledger strips per DC increment (§11)
+    ingest_chunks: int = 0
+    ingest_rows: int = 0
+    seed: int = 0
+
+    @property
+    def fd_increment_rows(self) -> int:
+        """Rows per background FD increment; the 0 default scales with the
+        instance size."""
+        return self.increment_rows or max(self.rows // 8, 64)
+
+    @property
+    def held_back_rows(self) -> int:
+        """Rows kept out of the seed instance for streaming ingest."""
+        return self.ingest_chunks * self.ingest_rows
+
+    @classmethod
+    def from_args(cls, args) -> "ServeOptions":
+        """Build from ``main``'s argparse namespace."""
+        return cls(
+            sessions=args.sessions, requests=args.requests, rows=args.rows,
+            max_batch=args.max_batch, background=args.background,
+            increment_rows=args.increment_rows,
+            increment_strips=args.increment_strips,
+            ingest_chunks=args.ingest_chunks, ingest_rows=args.ingest_rows,
+            seed=args.seed,
+        )
 
 
 def run_decode(args) -> None:
@@ -62,7 +121,7 @@ def run_decode(args) -> None:
         print(f"  req {r.rid}: prompt {len(r.prompt)} toks -> {r.out[:8]}...")
 
 
-def run_queries(args) -> None:
+def run_queries(opts: ServeOptions) -> None:
     import threading
 
     from repro.core.constraints import Atom, DC, FD
@@ -72,19 +131,32 @@ def run_queries(args) -> None:
     from repro.data.generators import hospital_like
     from repro.service import BackgroundCleaner, QueryServer
 
-    ds = hospital_like(args.rows, error_frac=0.1, seed=args.seed)
+    # generate the FULL dataset (seed + held-back stream) in one draw, so the
+    # same --seed with/without ingest sees the same rows — only delivery
+    # differs: the last held_back_rows arrive through QueryServer.ingest
+    total = opts.rows + opts.held_back_rows
+    ds = hospital_like(total, error_frac=0.1, seed=opts.seed)
     data = dict(ds.data)
     # a noisy quality score, mostly monotone in beds: the DC below says a
     # smaller hospital must not outrank a larger one — the inversions the
     # noise plants are its violations, giving the strip-grained background
     # DC cleaning (DESIGN.md §11) real work to bound
-    rng_q = np.random.default_rng(args.seed + 1)
+    rng_q = np.random.default_rng(opts.seed + 1)
     data["quality"] = (
         data["beds"].astype(np.float32)
-        + rng_q.integers(-60, 60, args.rows).astype(np.float32)
+        + rng_q.integers(-60, 60, total).astype(np.float32)
     )
+    seed_data = {k: v[: opts.rows] for k, v in data.items()}
+    chunks = [
+        {
+            k: v[opts.rows + c * opts.ingest_rows:
+                 opts.rows + (c + 1) * opts.ingest_rows]
+            for k, v in data.items()
+        }
+        for c in range(opts.ingest_chunks)
+    ]
     rel = make_relation(
-        data, overlay=["zip", "city", "beds", "quality"], k=8,
+        seed_data, overlay=["zip", "city", "beds", "quality"], k=8,
         rules=["zc", "bq"],
     )
     rules = [
@@ -93,44 +165,57 @@ def run_queries(args) -> None:
     ]
     daisy = Daisy(
         {"h": rel}, {"h": rules},
-        DaisyConfig(use_cost_model=False, expected_queries=args.requests),
+        DaisyConfig(use_cost_model=False, expected_queries=opts.requests),
     )
-    server = QueryServer(daisy, max_batch=args.max_batch)
+    server = QueryServer(daisy, max_batch=opts.max_batch)
     cleaner = None
-    if args.background:
+    if opts.background:
         # serving thread + cleaner thread: the cleaner warms cold scopes
         # whenever the submission queue is empty and yields on arrivals
         serving = threading.Thread(target=server.run, name="serving", daemon=True)
         serving.start()
         cleaner = BackgroundCleaner(
             daisy, server=server,
-            increment_rows=args.increment_rows or max(args.rows // 8, 64),
-            increment_strips=args.increment_strips,
+            increment_rows=opts.fd_increment_rows,
+            increment_strips=opts.increment_strips,
         ).start()
 
     # exploratory pool: per-neighborhood selections + one overview group-by
     # + a couple of DC-overlapping ranking views; users revisit the same
     # views over and over (Table 8's access pattern)
-    n_zip = max(args.rows // 20, 4)
+    n_zip = max(opts.rows // 20, 4)
     pool = [Query("h", preds=(Pred("zip", "==", g),)) for g in range(n_zip)]
     pool.append(Query("h", groupby=GroupBySpec(keys=("city",), agg="count")))
     pool.append(Query("h", preds=(Pred("beds", ">=", 400),)))
 
-    rng = np.random.default_rng(args.seed)
+    rng = np.random.default_rng(opts.seed)
     # the whole workload is submitted before drain(), so size the per-user
     # inflight bound to the share each session will queue
-    inflight = max(args.requests // args.sessions + 1, 1)
+    inflight = max(opts.requests // opts.sessions + 1, 1)
     sessions = [
         server.open_session(f"user{i}", max_inflight=inflight)
-        for i in range(args.sessions)
+        for i in range(opts.sessions)
     ]
+    # ingest-while-serving: slice the request stream into chunk+1 bursts and
+    # queue one append between bursts — the ingest ticket is a batch barrier
+    # (DESIGN.md §12), so queries before it answer over the old rows and
+    # queries after it see the appended instance
+    burst = max(opts.requests // (opts.ingest_chunks + 1), 1)
     t0 = time.perf_counter()
     tickets = []
-    for i in range(args.requests):
-        session = sessions[i % args.sessions]
+    next_chunk = 0
+    for i in range(opts.requests):
+        if i and i % burst == 0 and next_chunk < len(chunks):
+            tickets.append(server.ingest("h", chunks[next_chunk]))
+            next_chunk += 1
+        session = sessions[i % opts.sessions]
         # zipf-ish revisit pattern: hot views dominate
         idx = min(int(rng.zipf(1.7)) - 1, len(pool) - 1)
         tickets.append(server.submit(session, pool[idx]))
+    # any chunks the burst schedule didn't reach still stream in at the tail
+    while next_chunk < len(chunks):
+        tickets.append(server.ingest("h", chunks[next_chunk]))
+        next_chunk += 1
     if cleaner is not None:
         for t in tickets:
             t.wait(timeout=600)
@@ -142,7 +227,7 @@ def run_queries(args) -> None:
 
     snap = server.snapshot()
     print(
-        f"served {snap['queries']} queries from {args.sessions} sessions in "
+        f"served {snap['queries']} queries from {opts.sessions} sessions in "
         f"{dt:.2f}s ({snap['queries']/dt:.1f} q/s)"
     )
     print(
@@ -153,6 +238,12 @@ def run_queries(args) -> None:
         f"  detect {snap['detect_calls']} / repair {snap['repair_calls']} "
         f"-> {snap['detect_repair_per_query']} invocations amortized per query"
     )
+    if snap["ingests"]:
+        print(
+            f"  ingest: {snap['ingests']} appends, {snap['ingested_rows']} rows "
+            f"streamed in, {snap['ingest_pending_deltas']} pending deltas queued "
+            f"(final instance {int(daisy.db['h'].num_rows())} rows)"
+        )
     if cleaner is not None:
         bg = snap["background"]
         print(
@@ -192,10 +283,19 @@ def main():
         "--increment-strips", type=int, default=1,
         help="work-ledger strips per background DC increment (DESIGN.md §11)",
     )
+    ap.add_argument(
+        "--ingest-chunks", type=int, default=0,
+        help="appends to stream through QueryServer.ingest mid-workload "
+             "(DESIGN.md §12; 0 = fixed instance)",
+    )
+    ap.add_argument(
+        "--ingest-rows", type=int, default=0,
+        help="rows per streamed append (held back from the seed instance)",
+    )
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.workload == "queries":
-        run_queries(args)
+        run_queries(ServeOptions.from_args(args))
     else:
         run_decode(args)
 

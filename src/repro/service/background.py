@@ -53,6 +53,7 @@ import numpy as np
 from repro.core.constraints import FD
 from repro.core.cost import ScopePriority, prioritize_scopes, sharded_detect_cost
 from repro.core.executor import Daisy, StepReport
+from repro.core.ledger import TABLE_ROWS_RULE
 from repro.service.metrics import ServiceMetrics
 
 
@@ -112,12 +113,17 @@ class BackgroundCleaner:
     # ------------------------------------------------------------ priorities
     def rule_touches(self) -> Dict[Tuple[str, str], int]:
         """Aggregate per-scope touch counts across all sessions' lineage
-        (the priority model's demand signal; empty without a server)."""
+        (the priority model's demand signal; empty without a server).  The
+        per-table ``__rows__`` pseudo-scope (cache invalidation on ingest,
+        DESIGN.md §12) is not a cleanable scope and stays out of the
+        signal."""
         touches: Dict[Tuple[str, str], int] = {}
         if self.server is None:
             return touches
         for session in self.server.session_list():
             for dep, count in session.rule_touches().items():
+                if dep[1] == TABLE_ROWS_RULE:
+                    continue
                 touches[dep] = touches.get(dep, 0) + count
         return touches
 
@@ -137,6 +143,11 @@ class BackgroundCleaner:
                 n = int(cm.n) if cm is not None else int(
                     np.asarray(daisy.db[table].num_rows())
                 )
+                scope_ledger = daisy.ledger.scope(table, rule_name)
+                fresh_cold = (
+                    scope_ledger.fresh_cold_count if scope_ledger else 0
+                )
+                pending = daisy.ledger.has_pending(table, rule_name)
             if cm is not None:
                 full_cost = cm.df_effective
             elif info is not None:
@@ -158,6 +169,10 @@ class BackgroundCleaner:
                     cold_rows=cold,
                     expected_pairs=full_cost * cold / max(n, 1),
                     touch_probability=touch_p,
+                    # freshly appended rows are the state most likely to
+                    # surprise the next foreground query (DESIGN.md §12)
+                    fresh_boost=2.0 if (fresh_cold > 0 or pending) else 1.0,
+                    pending=pending,
                 )
             )
         return prioritize_scopes(scopes)

@@ -55,6 +55,11 @@ class ServiceMetrics:
     skipped_steps: int = 0
     rejected: int = 0  # session-limit denials
     errors: int = 0
+    # streaming ingest (DESIGN.md §12): appends served through the ticket
+    # queue and the rows they added (serving thread only)
+    ingests: int = 0
+    ingested_rows: int = 0
+    ingest_pending_deltas: int = 0  # rule scopes that queued an ingest-delta
     serving_idle_s: float = 0.0  # step-loop time spent waiting for work
     # background cleaner attribution (DESIGN.md §10)
     bg_increments: int = 0  # clean_scope_increment calls that did work
@@ -106,6 +111,13 @@ class ServiceMetrics:
     def observe_idle(self, seconds: float) -> None:
         """Accumulate step-loop wait time (serving thread)."""
         self.serving_idle_s += seconds
+
+    def observe_ingest(self, report) -> None:
+        """Record one served append from its ``IngestReport``
+        (serving thread)."""
+        self.ingests += 1
+        self.ingested_rows += report.rows
+        self.ingest_pending_deltas += len(report.pending_rules)
 
     def observe_background(
         self, detect_delta: int, repair_delta: int, busy_s: float,
@@ -175,6 +187,9 @@ class ServiceMetrics:
             "skipped_steps": self.skipped_steps,
             "rejected": self.rejected,
             "errors": self.errors,
+            "ingests": self.ingests,
+            "ingested_rows": self.ingested_rows,
+            "ingest_pending_deltas": self.ingest_pending_deltas,
             "elapsed_s": round(self.elapsed, 6),
             "queries_per_sec": round(self.queries_per_sec, 3),
             "hit_rate": round(self.hit_rate, 4),

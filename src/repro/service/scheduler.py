@@ -18,6 +18,14 @@ answers stay bit-identical to a serial fresh-instance run.
 (table, rule) scopes whose cleaning commits can change a query's answer —
 what the server versions cache entries against so a background cleaner's
 commits invalidate exactly the overlapping fingerprints (DESIGN.md §10).
+Every table read adds its ``(table, __rows__)`` pseudo-scope, bumped only
+by ``Daisy.ingest`` — an append invalidates this table's entries exactly
+once, even for queries overlapping no rule (DESIGN.md §12).
+
+Ingest tickets (``kind == "ingest"``) are batch BARRIERS: a batch is cut
+into segments at each ingest ticket, clustering only within a segment, so
+reordering by cluster never moves a query across an append it arrived
+before (or after) — arrival order against ingests is preserved.
 
 Thread-safety: everything here is pure functions over immutable inputs
 plus the ``Ticket`` record; a ticket is written by the serving thread and
@@ -33,25 +41,33 @@ from collections import OrderedDict
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.constraints import overlaps_query, rule_attrs
+from repro.core.ledger import TABLE_ROWS_RULE
 from repro.core.operators import Query, _fp_value
 from repro.service.session import Session
 
 
 @dataclasses.dataclass
 class Ticket:
-    """One submitted query: filled in by the serving thread, waited on by the
-    submitting session's thread (``wait`` blocks on ``event``; every other
-    field is safe to read only after ``event`` is set)."""
+    """One submitted request: filled in by the serving thread, waited on by
+    the submitting session's thread (``wait`` blocks on ``event``; every
+    other field is safe to read only after ``event`` is set).
+
+    ``kind`` is ``"query"`` (the default; ``query`` is set) or ``"ingest"``
+    (a streaming append, DESIGN.md §12: ``ingest`` holds ``(table, rows)``
+    and ``result`` becomes the ``IngestReport``).  Ingest tickets ride the
+    same submit queue so appends serialize with queries in arrival order."""
 
     seq: int
-    session: Session
-    query: Query
+    session: Optional[Session]
+    query: Optional[Query]
     fingerprint: str
     # the (table, rule) scopes this query's answer depends on — computed at
     # submit, versioned by the cache (DESIGN.md §10)
     deps: Tuple[Tuple[str, str], ...] = ()
+    kind: str = "query"
+    ingest: Optional[Tuple[str, Dict[str, object]]] = None  # (table, rows)
     event: threading.Event = dataclasses.field(default_factory=threading.Event)
-    result: Optional[object] = None  # DaisyResult once served
+    result: Optional[object] = None  # DaisyResult / IngestReport once served
     cached: bool = False
     clean_version: Optional[int] = None
     error: Optional[BaseException] = None
@@ -75,8 +91,14 @@ def rule_deps(query: Query, rules: Dict[str, Sequence]) -> Tuple[Tuple[str, str]
     Repairs only ever merge candidates for a rule's own attributes, so a
     commit for a non-overlapping rule cannot move this query's answer —
     the cache keys entries on the version vector over exactly this set
-    (DESIGN.md §10).  A query overlapping no rule depends on nothing
-    mutable and its cache entries never go stale.
+    (DESIGN.md §10).
+
+    Every table read also contributes its ``(table, __rows__)`` pseudo-scope
+    (``core.ledger.TABLE_ROWS_RULE``), whose version only ``Daisy.ingest``
+    bumps: appended rows can change ANY query's answer over the table —
+    including one overlapping no rule — so the cache must go stale exactly
+    once per append, and does, while entries over untouched tables survive
+    (DESIGN.md §12).
     """
     tables = (query.table,) + tuple(j.right for j in query.joins)
     attrs = query.attrs
@@ -85,6 +107,7 @@ def rule_deps(query: Query, rules: Dict[str, Sequence]) -> Tuple[Tuple[str, str]
         for rule in rules.get(t, ()):
             if overlaps_query(rule, attrs):
                 out.append((t, rule.name))
+        out.append((t, TABLE_ROWS_RULE))
     return tuple(out)
 
 
@@ -96,8 +119,12 @@ def cluster_key(query: Query, rules: Dict[str, Sequence]) -> Tuple:
     when their relaxations expand to the same correlated cluster and the
     first execution's detect/repair pass covers both.  Queries overlapping
     no rule cluster by fingerprint alone (nothing to share but the cache).
+    The ``__rows__`` pseudo-scope is a cache dependency, not a cleaning
+    cluster, and is excluded here.
     """
-    overlapping = rule_deps(query, rules)
+    overlapping = tuple(
+        d for d in rule_deps(query, rules) if d[1] != TABLE_ROWS_RULE
+    )
     rule_cols: set = set()
     for t, rule_name in overlapping:
         for rule in rules.get(t, ()):
@@ -116,11 +143,23 @@ def cluster_key(query: Query, rules: Dict[str, Sequence]) -> Tuple:
 def batch_tickets(
     tickets: Sequence[Ticket], rules: Dict[str, Sequence]
 ) -> List[List[Ticket]]:
-    """Group one step's tickets by cluster, first-arrival order throughout."""
+    """Group one step's tickets by cluster, first-arrival order throughout.
+
+    Ingest tickets are barriers (module docstring): each one becomes its
+    own singleton group, and clustering restarts after it — queries are
+    only ever reordered relative to other queries in the same segment,
+    never across an append."""
+    out: List[List[Ticket]] = []
     groups: "OrderedDict[Tuple, List[Ticket]]" = OrderedDict()
     for ticket in tickets:
+        if ticket.kind == "ingest":
+            out.extend(groups.values())
+            groups = OrderedDict()
+            out.append([ticket])
+            continue
         key = cluster_key(ticket.query, rules)
         if key == ((), ()):  # no rule overlap: share only via the cache
             key = ("fp", ticket.fingerprint)
         groups.setdefault(key, []).append(ticket)
-    return list(groups.values())
+    out.extend(groups.values())
+    return out

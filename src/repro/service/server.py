@@ -126,6 +126,34 @@ class QueryServer:
         thread; synchronous callers use ``submit`` + ``drain`` instead)."""
         return self.submit(session, query).wait(timeout)
 
+    def ingest(self, table: str, rows, session: Optional[Session] = None) -> Ticket:
+        """Queue a streaming append (DESIGN.md §12); thread-safe.
+
+        The returned ticket's ``result`` is the ``IngestReport`` once
+        served (``wait()``).  Ingest tickets ride the same queue as
+        queries and act as batch barriers (``scheduler.batch_tickets``),
+        so every query submitted before the append answers over the old
+        rows and every one after it answers over the appended instance —
+        arrival order, exactly as a serial client would observe.  No
+        session quota applies: appends are producer traffic, not answered
+        queries."""
+        with self._work:
+            if self._stopping:
+                raise RuntimeError("server is stopping; submission refused")
+            ticket = Ticket(
+                seq=self._seq,
+                session=session,
+                query=None,
+                fingerprint=f"ingest:{self._seq}",
+                kind="ingest",
+                ingest=(table, rows),
+            )
+            self._seq += 1
+            self._pending.append(ticket)
+            self._idle.clear()
+            self._work.notify()
+        return ticket
+
     # ----------------------------------------------------- background signal
     def pending_count(self) -> int:
         """Number of unserved foreground tickets (queued plus the batch a
@@ -171,6 +199,9 @@ class QueryServer:
         """Serve one ticket under the executor lock (atomic versus the
         background cleaner: vector read, cache lookup, execute, insert)."""
         daisy = self.daisy
+        if ticket.kind == "ingest":
+            self._serve_ingest(ticket)
+            return
         with daisy.lock:
             d0, r0 = daisy.detect_calls, daisy.repair_calls
             vector = daisy.scope_versions(ticket.deps)
@@ -210,6 +241,26 @@ class QueryServer:
                 rules=ticket.deps,
             )
         )
+        ticket.event.set()
+
+    def _serve_ingest(self, ticket: Ticket) -> None:
+        """Apply one queued append under the executor lock (DESIGN.md §12).
+        The ``__rows__`` version bump inside ``Daisy.ingest`` is what
+        invalidates this table's cache entries; no explicit cache work is
+        needed here."""
+        daisy = self.daisy
+        table, rows = ticket.ingest
+        with daisy.lock:
+            try:
+                report = daisy.ingest(table, rows)
+            except Exception as exc:  # surface to the caller, keep serving
+                self.metrics.errors += 1
+                ticket.error = exc
+                ticket.event.set()
+                return
+            self.metrics.observe_ingest(report)
+            ticket.result = report
+            ticket.clean_version = daisy.clean_version
         ticket.event.set()
 
     # ------------------------------------------------------------ lifecycle

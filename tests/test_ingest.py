@@ -1,0 +1,229 @@
+"""Streaming-ingest equivalence (hypothesis, DESIGN.md §12).
+
+The property the ingest path stands on: appending rows in chunks and
+cleaning after each append converges to EXACTLY the state a fresh instance
+built from all rows reaches in one clean — canonical per-row candidate
+sets (value, kind, count) bit-identical over the valid prefix.  That holds
+because ingest-deltas carry the same pair counts a full scan would have
+produced for the checked rows (core/repair.py pair-count semantics) and
+candidate merges are commutative/associative (Lemma 4).
+
+Also pinned here, per append:
+
+* checked bits of pre-existing rows are NEVER invalidated by an append —
+  new rows land cold, old warm rows stay warm;
+* version bumps touch only the ``(table, __rows__)`` pseudo-scope — rule
+  scope versions move when cleaning merges the delta, never on the append
+  itself, so cached answers for other tables/rules stay valid.
+
+The equivalence regime (DESIGN.md §12 lists the caveats, the same ones
+benchmarks/serve_bg_warmup.py gates under):
+
+* rules are attribute-disjoint (FD on zip/city, DC on beds/quality);
+* value ranges are small relative to k, so candidate sets never hit the
+  top-k truncation;
+* the FD data is cluster-DISJOINT (a city value appears in exactly one
+  zip group): lhs candidates (P(lhs | rhs), Example 2) are grouped by
+  rhs value, so an rhs value shared ACROSS lhs groups couples groups that
+  partitioned scans — background increments since PR 5, ingest deltas
+  here — visit at different times with different scopes.  Disjoint data
+  makes the lhs grouping group-local and the partitioning exact.
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.constraints import DC, FD, Atom
+from repro.core.executor import Daisy, DaisyConfig
+from repro.core.ledger import TABLE_ROWS_RULE
+from repro.core.operators import GroupBySpec, Pred, Query
+from repro.core.relation import append_rows, make_relation
+
+SETTINGS = dict(max_examples=6, deadline=None)
+
+OVERLAY = ["zip", "city", "beds", "quality"]
+RULES = [
+    FD("zc", "zip", "city"),
+    DC("bq", [Atom("beds", "<", "beds"), Atom("quality", ">", "quality")]),
+]
+
+
+def _cfg():
+    # accuracy_threshold=2.0: auto DC steps always resolve to full cleans,
+    # so the streamed and rebuilt runs execute the same plan shape
+    return DaisyConfig(use_cost_model=False, accuracy_threshold=2.0)
+
+
+def _make(data):
+    rel = make_relation(data, overlay=OVERLAY, k=8, rules=["zc", "bq"])
+    return Daisy({"h": rel}, {"h": RULES}, _cfg())
+
+
+def _full_clean(daisy):
+    """Two full-scope queries: a bare group-by (FD pushdown full) and an
+    everything-qualifies selection on the DC's attribute (full DC clean
+    with an empty partner scope)."""
+    daisy.execute(Query("h", groupby=GroupBySpec(keys=("city",), agg="count")))
+    daisy.execute(Query("h", preds=(Pred("beds", ">=", 0),)))
+
+
+def _canonical(daisy, n_rows):
+    """Per-attr, per-row sorted (value, kind, count) candidate sets over
+    the first ``n_rows`` rows — capacity-independent state signature."""
+    rel = daisy.db["h"]
+    out = {}
+    for attr in OVERLAY:
+        vals = np.asarray(rel.cand[attr])[:n_rows]
+        cnts = np.asarray(rel.ccount[attr])[:n_rows]
+        kinds = np.asarray(rel.ckind[attr])[:n_rows]
+        out[attr] = [
+            sorted(
+                (int(v), int(kk), round(float(c), 3))
+                for v, c, kk in zip(vals[r], cnts[r], kinds[r])
+                if c > 1e-9
+            )
+            for r in range(n_rows)
+        ]
+    return out
+
+
+@st.composite
+def ingest_case(draw):
+    n_seed = draw(st.integers(4, 12))
+    sizes = draw(st.lists(st.integers(1, 6), min_size=1, max_size=3))
+    total = n_seed + sum(sizes)
+
+    def col(lo, hi):
+        vs = draw(st.lists(st.integers(lo, hi), min_size=total, max_size=total))
+        return np.array(vs, np.int32)
+
+    zips = col(0, 3)
+    # cluster-disjoint cities: city values live in [zip*8, zip*8 + 6), so no
+    # city value bridges zip groups (see module docstring)
+    data = {
+        "zip": zips,
+        "city": zips * 8 + col(0, 5),
+        "beds": col(0, 40),
+        "quality": col(0, 40),
+    }
+    return n_seed, sizes, data
+
+
+class TestIngestEquivalence:
+    @given(ingest_case())
+    @settings(**SETTINGS)
+    def test_chunked_ingest_matches_rebuild(self, case):
+        n_seed, sizes, data = case
+        total = n_seed + sum(sizes)
+
+        streamed = _make({k: v[:n_seed] for k, v in data.items()})
+        _full_clean(streamed)
+        lo = n_seed
+        for size in sizes:
+            chunk = {k: v[lo: lo + size] for k, v in data.items()}
+            before = int(streamed.db["h"].num_rows())
+            checked_before = {
+                r.name: np.asarray(streamed.db["h"].checked[r.name])[:before].copy()
+                for r in RULES
+            }
+            rule_v = {r.name: streamed.ledger.version("h", r.name) for r in RULES}
+            rows_v = streamed.ledger.version("h", TABLE_ROWS_RULE)
+
+            report = streamed.ingest("h", chunk)
+            assert report.rows == size and report.start == before
+
+            # checked bits never invalidated by the append itself
+            for r in RULES:
+                np.testing.assert_array_equal(
+                    np.asarray(streamed.db["h"].checked[r.name])[:before],
+                    checked_before[r.name],
+                )
+            # only the __rows__ pseudo-scope bumps; rule scopes move when
+            # cleaning merges the delta, not on append
+            assert streamed.ledger.version("h", TABLE_ROWS_RULE) == rows_v + 1
+            for r in RULES:
+                assert streamed.ledger.version("h", r.name) == rule_v[r.name]
+
+            _full_clean(streamed)
+            lo += size
+
+        rebuilt = _make(dict(data))
+        _full_clean(rebuilt)
+
+        sig_s = _canonical(streamed, total)
+        sig_r = _canonical(rebuilt, total)
+        for attr in OVERLAY:
+            assert sig_s[attr] == sig_r[attr], (
+                f"streamed candidate state diverged from rebuild on {attr!r}"
+            )
+        for r in RULES:
+            np.testing.assert_array_equal(
+                np.asarray(streamed.db["h"].checked[r.name])[:total],
+                np.asarray(rebuilt.db["h"].checked[r.name])[:total],
+            )
+
+    @given(ingest_case())
+    @settings(**SETTINGS)
+    def test_untouched_table_versions_stable(self, case):
+        n_seed, sizes, data = case
+        rel_h = make_relation(
+            {k: v[:n_seed] for k, v in data.items()},
+            overlay=OVERLAY, k=8, rules=["zc", "bq"],
+        )
+        rel_u = make_relation(
+            {"zip": data["zip"][:n_seed], "city": data["city"][:n_seed]},
+            overlay=["zip", "city"], k=8, rules=["zc2"],
+        )
+        daisy = Daisy(
+            {"h": rel_h, "u": rel_u},
+            {"h": RULES, "u": [FD("zc2", "zip", "city")]},
+            _cfg(),
+        )
+        u_deps = [("u", "zc2"), ("u", TABLE_ROWS_RULE)]
+        u_vector = daisy.scope_versions(u_deps)
+        daisy.ingest("h", {k: v[n_seed: n_seed + sizes[0]] for k, v in data.items()})
+        assert daisy.scope_versions(u_deps) == u_vector, (
+            "append into 'h' moved version state of untouched table 'u'"
+        )
+
+
+def test_append_rows_preserves_state_bit_for_bit():
+    """Growing the backing arrays must not perturb existing rows: columns,
+    overlay, counts, kinds, checked, valid — all bit-identical."""
+    data = {
+        "zip": np.array([1, 1, 2, 2], np.int32),
+        "city": np.array([5, 6, 7, 7], np.int32),
+    }
+    daisy = Daisy(
+        {"h": make_relation(data, overlay=["zip", "city"], k=4, rules=["zc"])},
+        {"h": [FD("zc", "zip", "city")]},
+        DaisyConfig(use_cost_model=False),
+    )
+    daisy.execute(Query("h", groupby=GroupBySpec(keys=("city",), agg="count")))
+    rel = daisy.db["h"]
+    snap = {
+        "cols": {k: np.asarray(v).copy() for k, v in rel.columns.items()},
+        "cand": {k: np.asarray(v).copy() for k, v in rel.cand.items()},
+        "ccount": {k: np.asarray(v).copy() for k, v in rel.ccount.items()},
+        "checked": {k: np.asarray(v).copy() for k, v in rel.checked.items()},
+        "valid": np.asarray(rel.valid).copy(),
+    }
+    n = rel.capacity
+    # force a growth: append more rows than the spare capacity holds
+    grown, start = append_rows(
+        rel,
+        {"zip": np.full(n + 1, 3, np.int32), "city": np.full(n + 1, 9, np.int32)},
+    )
+    assert start == 4 and grown.capacity > n
+    for k, v in snap["cols"].items():
+        np.testing.assert_array_equal(np.asarray(grown.columns[k])[:n], v)
+    for k, v in snap["cand"].items():
+        np.testing.assert_array_equal(np.asarray(grown.cand[k])[:n], v)
+    for k, v in snap["ccount"].items():
+        np.testing.assert_array_equal(np.asarray(grown.ccount[k])[:n], v)
+    for k, v in snap["checked"].items():
+        np.testing.assert_array_equal(np.asarray(grown.checked[k])[:n], v)
+    np.testing.assert_array_equal(np.asarray(grown.valid)[:n], snap["valid"])
+    assert not np.asarray(grown.checked["zc"])[start:].any(), (
+        "appended rows must land cold (unchecked)"
+    )

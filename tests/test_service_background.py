@@ -23,6 +23,7 @@ from repro.core.cost import (
     sharded_detect_cost,
 )
 from repro.core.executor import Daisy, DaisyConfig
+from repro.core.ledger import TABLE_ROWS_RULE
 from repro.core.operators import Pred, Query
 from repro.core.relation import make_relation
 from repro.service import BackgroundCleaner, QueryServer, rule_deps
@@ -304,14 +305,16 @@ class TestCacheExactness:
         assert server.cache.stale == 2
 
     def test_no_rule_overlap_never_invalidated(self):
-        """A query depending on no rule has an empty dependency vector:
-        background cleaning can never evict it."""
+        """A query depending on no rule carries only its table's ``__rows__``
+        pseudo-dependency (ingest invalidation, DESIGN.md §12): background
+        cleaning bumps rule scopes, never ``__rows__``, so it can never
+        evict the entry."""
         daisy = Daisy(self.two_table_db(), self.TWO_RULES,
                       DaisyConfig(use_cost_model=False))
         server = QueryServer(daisy)
         sess = server.open_session("s")
-        q = Query("t2", preds=())  # no rule attrs -> deps == ()
-        assert rule_deps(q, daisy.rules) == ()
+        q = Query("t2", preds=())  # no rule attrs -> only the rows pseudo-dep
+        assert rule_deps(q, daisy.rules) == (("t2", TABLE_ROWS_RULE),)
         server.submit(sess, q)
         server.drain()
         BackgroundCleaner(daisy, server=server).drain()

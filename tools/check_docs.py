@@ -2,7 +2,7 @@
 """Fail when the repo's docs rot: dangling DESIGN.md section citations,
 dangling markdown links/anchors, or undocumented public service API.
 
-Three checks, all static (stdlib only — the CI docs job runs without jax):
+Four checks, all static (stdlib only — the CI docs job runs without jax):
 
 1. **Section citations.**  Docstrings reference design sections as
    ``DESIGN.md §N``; DESIGN.md marks section headers as ``## §N Title``.
@@ -15,6 +15,12 @@ Three checks, all static (stdlib only — the CI docs job runs without jax):
    thread-safety contracts live there (DESIGN.md §9/§10), so a missing
    docstring is missing documentation of who may touch what under which
    lock.
+4. **Declared public surface.**  ``repro.core``, ``repro.service``, and
+   ``repro.dist`` declare their stable API via ``__all__``: every public
+   name the package ``__init__`` binds must appear in ``__all__`` and
+   vice versa, so a re-export added without declaring it (or a stale
+   ``__all__`` entry after a rename) fails the docs job, not a user's
+   ``import *``.
 
 Run from the repo root (CI docs job and tests/test_docs.py both do):
 
@@ -144,6 +150,67 @@ def public_service_symbols() -> int:
     return count
 
 
+# ------------------------------------------------------------- public surface
+PUBLIC_PACKAGES = ("core", "service", "dist")
+
+
+def _bound_public_names(tree: ast.Module) -> set[str]:
+    """Public names a package ``__init__`` binds at the top level:
+    re-exports (``from ... import``), defs, and simple assignments."""
+    names: set[str] = set()
+    for node in tree.body:
+        if isinstance(node, ast.ImportFrom):
+            names.update(a.asname or a.name for a in node.names)
+        elif isinstance(node, ast.Import):
+            names.update((a.asname or a.name).split(".")[0] for a in node.names)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+            names.add(node.name)
+        elif isinstance(node, ast.Assign):
+            names.update(
+                t.id for t in node.targets if isinstance(t, ast.Name)
+            )
+    return {n for n in names if not n.startswith("_") and n != "*"}
+
+
+def _declared_all(tree: ast.Module) -> list[str] | None:
+    for node in tree.body:
+        if isinstance(node, ast.Assign) and any(
+            isinstance(t, ast.Name) and t.id == "__all__" for t in node.targets
+        ):
+            try:
+                value = ast.literal_eval(node.value)
+            except ValueError:
+                return None
+            return [str(v) for v in value]
+    return None
+
+
+def public_api_problems() -> list[str]:
+    """Undeclared or stale ``__all__`` entries in the stable packages
+    (ast-based — no imports, so the bare docs job can run it)."""
+    problems = []
+    for pkg in PUBLIC_PACKAGES:
+        path = ROOT / "src" / "repro" / pkg / "__init__.py"
+        rel = str(path.relative_to(ROOT))
+        tree = ast.parse(path.read_text())
+        declared = _declared_all(tree)
+        if declared is None:
+            problems.append(f"{rel}: package declares no literal __all__")
+            continue
+        bound = _bound_public_names(tree)
+        for name in sorted(bound - set(declared)):
+            problems.append(
+                f"{rel}: public symbol {name!r} is bound but missing from __all__"
+            )
+        for name in sorted(set(declared) - bound):
+            problems.append(
+                f"{rel}: __all__ lists {name!r} but the package does not bind it"
+            )
+        if sorted(declared) != declared:
+            problems.append(f"{rel}: __all__ is not sorted")
+    return problems
+
+
 # ------------------------------------------------------------------ top level
 def check() -> list[str]:
     problems = []
@@ -161,6 +228,7 @@ def check() -> list[str]:
         problems.append("README.md does not exist")
     problems += markdown_problems()
     problems += service_docstring_problems()
+    problems += public_api_problems()
     return problems
 
 
@@ -174,7 +242,8 @@ def main() -> int:
         print(
             f"docs OK: {len(cites)} DESIGN.md sections cited from "
             f"{total} file references; markdown links resolve; "
-            f"{public_service_symbols()} public service symbols documented"
+            f"{public_service_symbols()} public service symbols documented; "
+            f"__all__ consistent across {len(PUBLIC_PACKAGES)} packages"
         )
     return 1 if problems else 0
 
