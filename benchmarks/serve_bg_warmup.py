@@ -96,14 +96,19 @@ def run_serial(db, cfg, cycle_queries):
     return sigs
 
 
-def run_service(db, cfg, cycle_queries, idle_increments: int, opts: ServeOptions):
+def run_service(db, cfg, cycle_queries, idle_increments: int, opts: ServeOptions,
+                tracer=None):
     """Serve the workload cycle by cycle; with ``opts.background`` the
     cleaner drains up to ``idle_increments`` cold-scope increments in the
     idle window after each cycle (the deterministic, cooperative form of the
     idle-budget tuning knob — the threaded form is ``BackgroundCleaner.start``).
     All serving knobs arrive through the shared ``ServeOptions`` bundle, so
-    they line up 1:1 with the CLI driver's flags."""
-    daisy = Daisy(db, RULES, cfg)
+    they line up 1:1 with the CLI driver's flags.
+
+    ``tracer`` (DESIGN.md §13) wires the whole stack; the returned
+    ``windows`` are the measured serving intervals (submit..drain and the
+    non-empty cleaner drains) the coverage gate is computed over."""
+    daisy = Daisy(db, RULES, cfg, tracer=tracer)
     server = QueryServer(
         daisy, cache=ResultCache(capacity=512), max_batch=opts.max_batch
     )
@@ -115,15 +120,17 @@ def run_service(db, cfg, cycle_queries, idle_increments: int, opts: ServeOptions
         else None
     )
     sessions = [server.open_session(f"user{i}") for i in range(opts.sessions)]
-    sigs, per_cycle = [], []
+    sigs, per_cycle, windows = [], [], []
     for c, queries in enumerate(cycle_queries):
         d0 = server.metrics.detect_calls
         h0 = server.metrics.cache_hits
+        t0 = time.perf_counter()
         tickets = [
             server.submit(sessions[i % len(sessions)], q)
             for i, q in enumerate(queries)
         ]
         server.drain()
+        windows.append((t0, time.perf_counter()))
         sigs.extend(signature(t.result) for t in tickets)
         per_cycle.append(
             {
@@ -134,8 +141,10 @@ def run_service(db, cfg, cycle_queries, idle_increments: int, opts: ServeOptions
             }
         )
         if cleaner is not None:
-            cleaner.drain(max_increments=idle_increments)
-    return sigs, server, per_cycle
+            t0 = time.perf_counter()
+            if cleaner.drain(max_increments=idle_increments):
+                windows.append((t0, time.perf_counter()))
+    return sigs, server, per_cycle, windows
 
 
 def dc_partial_reuse_gate(n: int, seed: int = 17):
@@ -202,7 +211,7 @@ def dc_partial_reuse_gate(n: int, seed: int = 17):
     return pairs
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, tracer=None):
     n = 480 if quick else 3840
     groups = 24 if quick else 64
     v0, step = (4, 4) if quick else (8, 8)
@@ -212,20 +221,25 @@ def run(quick: bool = False):
     cycle_queries = workload(groups, v0, step, cycles)
     n_queries = sum(len(qs) for qs in cycle_queries)
 
+    # the serial reference always runs UNtraced: the bit-identity gate
+    # against it is therefore also the traced-vs-untraced neutrality gate
     t0 = time.perf_counter()
     sigs_serial = run_serial(build_db(n, groups), cfg, cycle_queries)
     dt_serial = time.perf_counter() - t0
 
     rows, results = [], {}
+    all_windows = []
     for variant, background in (("service", False), ("service+bg", True)):
         opts = ServeOptions(
             sessions=4, rows=n, background=background,
             increment_rows=(n // groups) * (step + 1),
         )
         t0 = time.perf_counter()
-        sigs, server, per_cycle = run_service(
+        sigs, server, per_cycle, windows = run_service(
             build_db(n, groups), cfg, cycle_queries, idle_increments, opts,
+            tracer=tracer,
         )
+        all_windows.extend(windows)
         dt = time.perf_counter() - t0
         snap = server.snapshot()
         results[variant] = (sigs, snap, per_cycle)
@@ -273,18 +287,54 @@ def run(quick: bool = False):
     # gate 4 (ISSUE 5): strip-level partial-work reuse on a DC scope
     dc_partial_reuse_gate(240 if quick else 1024)
 
+    # gate 5 (DESIGN.md §13, under --trace only): the span union explains
+    # >= 90% of the measured serving wall-clock (queue-wait lives on its
+    # synthetic track and is excluded — it overlaps real serving spans)
+    cov = roll = None
+    if tracer is not None:
+        from repro.obs import coverage, rollup
+
+        events = tracer.events()
+        cov = coverage(events, all_windows, exclude_threads=("queue",))
+        assert cov >= 0.9, (
+            f"trace rollup covers only {cov:.1%} of the serving wall-clock"
+        )
+        roll = rollup(events)
+        print(f"serve_bg_warmup trace: {len(events)} spans cover "
+              f"{cov:.1%} of {sum(b - a for a, b in all_windows):.2f}s serving")
+
     print(
         f"serve_bg_warmup: answers bit-identical; foreground detects "
         f"{fg_svc} -> {fg_bg} "
         f"({snap_bg['background']['detect_calls']} absorbed in background); "
         f"serial reference {dt_serial:.2f}s"
     )
-    return write_csv(
+    artifact = write_csv(
         "serve_bg_warmup",
         ["variant", "cycle", "views", "fg_detect", "cache_hits",
          "bg_increments_total", "seconds_total"],
         rows,
     )
+    return {
+        "artifact": artifact,
+        "gates": {
+            "bit_identical": True,
+            "fg_detects_reduced": fg_bg < fg_svc,
+            "steady_state_cached": cyc_bg[-1]["hits"] == cyc_bg[-1]["views"],
+            "partial_reuse": True,
+            "trace_coverage": cov,
+        },
+        "headline": {
+            "queries": n_queries,
+            "fg_detect_service": fg_svc,
+            "fg_detect_service_bg": fg_bg,
+            "bg_detect": snap_bg["background"]["detect_calls"],
+            "bg_increments": snap_bg["background"]["increments"],
+            "hit_rate_service_bg": snap_bg["hit_rate"],
+            "serial_seconds": round(dt_serial, 3),
+        },
+        "rollup": roll,
+    }
 
 
 if __name__ == "__main__":

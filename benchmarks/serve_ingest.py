@@ -62,13 +62,13 @@ def build_data(total: int, groups: int, seed: int = 23):
     return {"zip": zipc, "city": city, "price": price, "disc": disc}
 
 
-def _make_daisy(data, chunk: int):
+def _make_daisy(data, chunk: int, tracer=None):
     rel = make_relation(data, overlay=OVERLAY, k=8, rules=["zc", "pd"])
     cfg = DaisyConfig(
         use_cost_model=False, accuracy_threshold=2.0,
         dc_block=chunk, strip_rows=chunk,
     )
-    return Daisy({"h": rel}, {"h": RULES}, cfg)
+    return Daisy({"h": rel}, {"h": RULES}, cfg, tracer=tracer)
 
 
 def _probes():
@@ -134,7 +134,7 @@ def _rebuild(data, n_rows: int, chunk: int):
     return _answers(results, n_rows), _canonical(daisy, n_rows), pairs
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, tracer=None):
     opts = ServeOptions(
         sessions=2,
         rows=128 if quick else 512,
@@ -146,9 +146,15 @@ def run(quick: bool = False):
     total = opts.rows + opts.held_back_rows
     data = build_data(total, groups=max(opts.rows // 16, 4), seed=opts.seed)
 
-    daisy = _make_daisy({k: v[: opts.rows] for k, v in data.items()}, chunk)
+    # only the streamed instance is traced; the stop-the-world rebuild
+    # reference stays untraced, so gate (a) doubles as the traced-vs-
+    # untraced bit-neutrality gate (DESIGN.md §13)
+    daisy = _make_daisy(
+        {k: v[: opts.rows] for k, v in data.items()}, chunk, tracer=tracer
+    )
     server = QueryServer(daisy, max_batch=opts.max_batch)
     sessions = [server.open_session(f"user{i}") for i in range(opts.sessions)]
+    windows = []
 
     def probe_round():
         t0 = time.perf_counter()
@@ -158,6 +164,7 @@ def run(quick: bool = False):
         ]
         server.drain()
         dt = time.perf_counter() - t0
+        windows.append((t0, t0 + dt))
         return [t.result for t in tickets], dt
 
     # warm the seed instance (both scopes fully cleaned and cached)
@@ -227,18 +234,56 @@ def run(quick: bool = False):
         n_prev = n_now
 
     snap = server.snapshot()
+
+    # gate (d) (DESIGN.md §13, under --trace only): the spans explain
+    # >= 90% of the measured probe-round wall-clock (queue-wait is a
+    # synthetic overlapping track and is excluded)
+    cov = roll = None
+    if tracer is not None:
+        from repro.obs import coverage, rollup
+
+        events = tracer.events()
+        cov = coverage(events, windows, exclude_threads=("queue",))
+        assert cov >= 0.9, (
+            f"trace rollup covers only {cov:.1%} of the serving wall-clock"
+        )
+        roll = rollup(events)
+        print(f"serve_ingest trace: {len(events)} spans cover {cov:.1%} of "
+              f"{sum(b - a for a, b in windows):.2f}s serving")
+
     print(
         f"serve_ingest: {snap['ingests']} appends / {snap['ingested_rows']} "
         f"rows streamed into a live instance; answers bit-identical to "
         f"stop-the-world rebuilds at every round; "
         f"{snap['ingest_pending_deltas']} pending deltas drained"
     )
-    return write_csv(
+    artifact = write_csv(
         "serve_ingest",
         ["round", "rows_total", "rows_appended", "dc_pairs_streamed",
          "dc_pairs_rebuild", "probe_seconds", "warm_probe_seconds"],
         rows_csv,
     )
+    return {
+        "artifact": artifact,
+        "gates": {
+            "bit_identical": True,
+            "delta_pairs_exact": True,
+            "no_checked_strip_rescan": True,
+            "trace_coverage": cov,
+        },
+        "headline": {
+            "appends": snap["ingests"],
+            "ingested_rows": snap["ingested_rows"],
+            "pending_deltas": snap["ingest_pending_deltas"],
+            "final_rows": int(np.asarray(daisy.db["h"].num_rows())),
+            "rounds": [
+                {"round": r[0], "dc_pairs_streamed": r[3],
+                 "dc_pairs_rebuild": r[4]}
+                for r in rows_csv
+            ],
+        },
+        "rollup": roll,
+    }
 
 
 if __name__ == "__main__":

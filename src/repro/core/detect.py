@@ -193,6 +193,7 @@ def detect_auto(
     row_blocks: Tuple[int, int] | None = None,
     col_blocks: Tuple[int, int] | None = None,
     strip_rows: int | None = None,
+    tracer=None,
 ) -> DetectResult:
     """THE detection entry point: dispatch ``rule`` (FD or DC) to the dense
     or sharded scan and always return a ``DetectResult``.
@@ -209,6 +210,9 @@ def detect_auto(
     re-routes rows, so strip locality does not survive the shuffle; its
     scopes already shrink to the strip's rows).  ``strip_rows`` feeds the
     sharded path's per-shard strip-coverage report (DESIGN.md §11).
+    ``tracer`` (DESIGN.md §13) reaches only the sharded path, which spans
+    its shuffle and per-shard scans; the dense scans are one kernel call
+    and are timed by the caller's ``clean.detect`` span.
     """
     if isinstance(rule, FD):
         if will_shard(rule, mesh, n_shards):
@@ -216,7 +220,7 @@ def detect_auto(
 
             det, info = detect_fd_sharded_info(
                 rel, rule, row_scope, mesh, k=k, n_shards=n_shards,
-                strip_rows=strip_rows,
+                strip_rows=strip_rows, tracer=tracer,
             )
             return DetectResult(det, info)
         return DetectResult(detect_fd(rel, rule, row_scope, k=k), None)
@@ -228,7 +232,7 @@ def detect_auto(
 
             det, info = detect_dc_sharded_info(
                 rel, rule, row_scope, col_scope, mesh, n_shards=n_shards,
-                block=block, strip_rows=strip_rows,
+                block=block, strip_rows=strip_rows, tracer=tracer,
             )
             return DetectResult(det, info)
         return DetectResult(

@@ -42,6 +42,7 @@ from repro.core.constraints import DC, FD
 from repro.core.cost import CostModel, sharded_detect_cost
 from repro.core.detect import detect_auto, detect_fd
 from repro.core.ledger import TABLE_ROWS_RULE, WorkLedger
+from repro.obs.trace import NULL_TRACER
 from repro.core.operators import (
     GroupBySpec,
     JoinState,
@@ -65,6 +66,15 @@ from repro.core.relation import Relation, append_rows
 from repro.core.repair import Candidates, dc_repair_candidates, fd_repair_candidates
 from repro.core.setops import group_distinct_candidates
 from repro.core.update import apply_candidates, mark_checked, unchecked
+
+
+def _blocks_attr(blocks) -> Optional[List[int]]:
+    """JSON-safe span annotation for a kernel block range: ``[lo, hi)`` as
+    plain ints (ledger block bounds can be numpy scalars), None passthrough."""
+    if blocks is None:
+        return None
+    lo, hi = blocks
+    return [int(lo), int(hi)]
 
 
 @dataclasses.dataclass
@@ -167,10 +177,15 @@ class Daisy:
         db: Dict[str, Relation],
         rules: Dict[str, Sequence[FD | DC]],
         config: DaisyConfig | None = None,
+        tracer=None,
     ):
         self.db = dict(db)
         self.rules = {t: list(rs) for t, rs in rules.items()}
         self.config = config or DaisyConfig()
+        # observability seam (DESIGN.md §13): spans around every clean phase
+        # (relax / detect / repair / mark), execute, and ingest.  Defaults to
+        # the strict no-op tracer, so untraced runs pay only the call site.
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.stats: Dict[Tuple[str, str], object] = {}
         self.cost: Dict[Tuple[str, str], CostModel] = {}
         # serving hooks (DESIGN.md §9/§10): a monotone version counter bumped
@@ -240,14 +255,15 @@ class Daisy:
         """``mark_checked`` + version bump + ledger coverage refresh: checked
         bits steer future cleaning, so they are part of the versioned state,
         and they are exactly what moves strip coverage (DESIGN.md §11)."""
-        self._clean_version += 1
-        rel = mark_checked(rel, rule_name, scope)
-        self.ledger.commit(
-            table, rule_name, np.asarray(self._cold_mask(rel, table, rule_name))
-        )
-        cm = self.cost.get((table, rule_name))
-        if cm is not None:
-            cm.observe_progress(self.ledger.scope(table, rule_name).cold_fraction)
+        with self.tracer.span("clean.mark", rule=rule_name, table=table):
+            self._clean_version += 1
+            rel = mark_checked(rel, rule_name, scope)
+            self.ledger.commit(
+                table, rule_name, np.asarray(self._cold_mask(rel, table, rule_name))
+            )
+            cm = self.cost.get((table, rule_name))
+            if cm is not None:
+                cm.observe_progress(self.ledger.scope(table, rule_name).cold_fraction)
         return rel
 
     # ------------------------------------------------------------ statistics
@@ -326,7 +342,15 @@ class Daisy:
         their deltas merge), so every cached answer reading this table
         goes stale exactly once and entries over other tables survive.
         """
-        with self._lock:
+        with self._lock, self.tracer.span("daisy.ingest", table=table) as sp:
+            report = self._ingest_locked(table, rows)
+            sp.set(rows=report.rows, grown=report.grown)
+            return report
+
+    def _ingest_locked(
+        self, table: str, rows: Mapping[str, np.ndarray]
+    ) -> IngestReport:
+        with self._lock:  # re-entrant; ``ingest`` already holds it
             if table not in self.db:
                 raise KeyError(f"unknown table {table!r}")
             rel = self.db[table]
@@ -562,10 +586,15 @@ class Daisy:
         if not pendings:
             return None
         rep = StepReport(rule.name, table, "ingest-delta")
-        if isinstance(rule, FD):
-            self._ingest_delta_fd(table, rule, pendings, rep)
-        else:
-            self._ingest_delta_dc(table, rule, pendings, rep)
+        with self.tracer.span(
+            "clean.ingest_delta", rule=rule.name, table=table,
+            deltas=len(pendings),
+        ) as sp:
+            if isinstance(rule, FD):
+                self._ingest_delta_fd(table, rule, pendings, rep)
+            else:
+                self._ingest_delta_dc(table, rule, pendings, rep)
+            sp.set(pairs=rep.detect_pairs)
         if report is not None:
             report.steps.append(rep)
         return rep
@@ -754,17 +783,21 @@ class Daisy:
                     if cm and record_cost:
                         cm.record(rep.answer_size, 0, 0.0, 0)
                     return
-            res = relax_fd(
-                rel,
-                answer,
-                fd,
-                max_iters=self.config.max_relax_iters,
-                use_rhs=step.use_rhs,
-            )
-            scope = answer | res.extra
-            rep.extra = int(np.asarray(jnp.sum(res.extra)))
-            rep.relax_iterations = int(np.asarray(res.iterations))
-            rep.relax_converged = bool(np.asarray(res.converged))
+            with self.tracer.span(
+                "clean.relax", rule=fd.name, table=table
+            ) as sp:
+                res = relax_fd(
+                    rel,
+                    answer,
+                    fd,
+                    max_iters=self.config.max_relax_iters,
+                    use_rhs=step.use_rhs,
+                )
+                scope = answer | res.extra
+                rep.extra = int(np.asarray(jnp.sum(res.extra)))
+                rep.relax_iterations = int(np.asarray(res.iterations))
+                rep.relax_converged = bool(np.asarray(res.converged))
+                sp.set(extra=rep.extra, iterations=rep.relax_iterations)
 
         repair_scope = scope & unchecked(rel, fd.name)
         if not bool(np.asarray(jnp.any(repair_scope))):
@@ -780,18 +813,25 @@ class Daisy:
         self.detect_calls += 1
         rep.detect_pairs = int(np.asarray(jnp.sum(scope)))  # group-by is O(scope)
         self.detect_pairs += rep.detect_pairs
-        det, sinfo = detect_auto(
-            rel, fd, scope, k=self.config.k,
-            mesh=mesh, n_shards=self.config.detect_shards,
-            strip_rows=self.ledger.strip_rows,
-        )
-        if sinfo is not None:
-            rep.detect_path = "sharded"
-            self._observe_sharded(table, fd.name, sinfo, cm)
+        with self.tracer.span(
+            "clean.detect", rule=fd.name, table=table, mode=rep.mode,
+            pairs=rep.detect_pairs,
+        ) as sp:
+            det, sinfo = detect_auto(
+                rel, fd, scope, k=self.config.k,
+                mesh=mesh, n_shards=self.config.detect_shards,
+                strip_rows=self.ledger.strip_rows, tracer=self.tracer,
+            )
+            if sinfo is not None:
+                rep.detect_path = "sharded"
+                self._observe_sharded(table, fd.name, sinfo, cm)
+            sp.set(path=rep.detect_path)
         self.repair_calls += 1
-        deltas = fd_repair_candidates(rel, fd, det, repair_scope)
-        rep.repaired = int(np.asarray(jnp.sum(det.violated & repair_scope)))
-        rel = self._apply(rel, deltas, table, fd.name)
+        with self.tracer.span("clean.repair", rule=fd.name, table=table) as sp:
+            deltas = fd_repair_candidates(rel, fd, det, repair_scope)
+            rep.repaired = int(np.asarray(jnp.sum(det.violated & repair_scope)))
+            rel = self._apply(rel, deltas, table, fd.name)
+            sp.set(repaired=rep.repaired)
         rel = self._mark(
             rel, table, fd.name, scope if mark_scope is None else mark_scope
         )
@@ -828,18 +868,26 @@ class Daisy:
         cols = int(np.asarray(jnp.sum(col_scope & rel.valid)))
         rep.detect_pairs += rows * cols
         self.detect_pairs += rows * cols
-        det, sinfo = detect_auto(
-            rel, dc, row_scope, col_scope, block=self.config.dc_block,
-            mesh=mesh, n_shards=self.config.detect_shards,
-            row_blocks=row_blocks, col_blocks=col_blocks,
-            strip_rows=self.ledger.strip_rows,
-        )
-        if sinfo is not None:
-            rep.detect_path = "sharded"
-            self._observe_sharded(table, dc.name, sinfo, cm)
+        with self.tracer.span(
+            "clean.detect", rule=dc.name, table=table, mode=rep.mode,
+            pairs=rows * cols,
+            row_blocks=_blocks_attr(row_blocks),
+            col_blocks=_blocks_attr(col_blocks),
+        ) as sp:
+            det, sinfo = detect_auto(
+                rel, dc, row_scope, col_scope, block=self.config.dc_block,
+                mesh=mesh, n_shards=self.config.detect_shards,
+                row_blocks=row_blocks, col_blocks=col_blocks,
+                strip_rows=self.ledger.strip_rows, tracer=self.tracer,
+            )
+            if sinfo is not None:
+                rep.detect_path = "sharded"
+                self._observe_sharded(table, dc.name, sinfo, cm)
+            sp.set(path=rep.detect_path)
         self.repair_calls += 1
-        deltas = dc_repair_candidates(rel, dc, det, row_scope, k=self.config.k)
-        rel = self._apply(rel, deltas, table, dc.name)
+        with self.tracer.span("clean.repair", rule=dc.name, table=table):
+            deltas = dc_repair_candidates(rel, dc, det, row_scope, k=self.config.k)
+            rel = self._apply(rel, deltas, table, dc.name)
         return rel, det
 
     def _covering_blocks(self, mask) -> Optional[Tuple[int, int]]:
@@ -994,7 +1042,9 @@ class Daisy:
         # serializes the read-modify-write of self.db / cost / version state
         # so concurrent callers interleave at query granularity (candidate
         # merges stay Lemma-4 order-independent either way).
-        with self._lock:
+        with self._lock, self.tracer.span(
+            "daisy.execute", table=query.table, joins=len(query.joins)
+        ) as sp:
             plan = plan_query(
                 query, self.rules, self._want_full(),
                 lemma1_fast_path=self.config.lemma1_fast_path,
@@ -1003,8 +1053,11 @@ class Daisy:
             report = ExecReport(notes=list(plan.notes))
 
             if not query.joins:
-                return self._execute_sp(query, plan, report)
-            return self._execute_join(query, plan, report)
+                result = self._execute_sp(query, plan, report)
+            else:
+                result = self._execute_join(query, plan, report)
+            sp.set(steps=len(report.steps), result_size=report.result_size)
+            return result
 
     # ----------------------------------------------------------- SP queries
     def _execute_sp(self, query: Query, plan: PlanInfo, report: ExecReport) -> DaisyResult:

@@ -54,6 +54,7 @@ from repro.core.constraints import DC, FD, equality_key_attrs, flip_op
 from repro.core.detect import DCDetectResult, FDDetectResult, _T1_REDUCE
 from repro.core.relation import Relation
 from repro.core.setops import group_distinct_candidates
+from repro.obs.trace import NULL_TRACER
 from repro.kernels import ops as kops
 from repro.kernels.ref import _identity
 from repro.dist.sharding import dp_axes
@@ -128,9 +129,13 @@ def _route(
     mesh,
     n_shards: int,
     capacity_factor: float,
+    tracer=None,
 ):
     """Shuffle rows by key with overflow-retry.  Returns (result, factor,
-    retries) where ``result`` has leading dims (n_shards, cap_routed)."""
+    retries) where ``result`` has leading dims (n_shards, cap_routed).
+    ``tracer`` spans the whole routing (``dist.shuffle``) and marks each
+    overflow retry with an instant (DESIGN.md §13)."""
+    tracer = tracer if tracer is not None else NULL_TRACER
     cap = key.shape[0]
     n_local = -(-cap // n_shards)
     padded = n_shards * n_local
@@ -149,12 +154,19 @@ def _route(
     valid2 = shard_view(valid, fill=False)
 
     factor, retries = capacity_factor, 0
-    while True:
-        res = shuffle_by_key(keys2, payload2, valid2, mesh, capacity_factor=factor)
-        if not bool(np.asarray(res.overflow)) or factor >= n_shards:
-            return res, factor, retries
-        factor = min(factor * 2.0, float(n_shards))
-        retries += 1
+    with tracer.span("dist.shuffle", n_shards=n_shards, rows=int(cap)) as sp:
+        while True:
+            res = shuffle_by_key(
+                keys2, payload2, valid2, mesh, capacity_factor=factor
+            )
+            if not bool(np.asarray(res.overflow)) or factor >= n_shards:
+                sp.set(retries=retries, capacity_factor=float(factor))
+                return res, factor, retries
+            factor = min(factor * 2.0, float(n_shards))
+            retries += 1
+            tracer.instant(
+                "dist.shuffle_overflow_retry", capacity_factor=float(factor)
+            )
 
 
 @functools.lru_cache(maxsize=None)
@@ -186,8 +198,9 @@ def _per_shard_fn(fn, mesh, n_shards: int):
     return jax.jit(batched)
 
 
-def _per_shard(fn, mesh, n_shards: int, args):
-    with mesh:
+def _per_shard(fn, mesh, n_shards: int, args, tracer=None):
+    tracer = tracer if tracer is not None else NULL_TRACER
+    with tracer.span("dist.shard_scan", n_shards=n_shards), mesh:
         return _per_shard_fn(fn, mesh, n_shards)(args)
 
 
@@ -253,6 +266,7 @@ def detect_dc_sharded_info(
     block: int = 256,
     capacity_factor: float = CAPACITY_FACTOR,
     strip_rows: Optional[int] = None,
+    tracer=None,
 ) -> Tuple[DCDetectResult, ShardedDetectInfo]:
     """Sharded ``detect_dc``: bit-identical to the dense scan for DCs with
     at least one same-attribute equality atom.  Also returns routing info
@@ -286,7 +300,8 @@ def detect_dc_sharded_info(
 
     key = _combine_keys([rel.columns[a] for a in key_attrs])
     res, factor, retries = _route(
-        key, payload_cols, participate, mesh, n_shards, capacity_factor
+        key, payload_cols, participate, mesh, n_shards, capacity_factor,
+        tracer=tracer,
     )
 
     cols = {
@@ -310,7 +325,8 @@ def detect_dc_sharded_info(
         cs,
     )
     t1c, t2c, t1s, t2s = _per_shard(
-        _dc_local_scan(ops, flipped, t1_red, t2_red, block), mesh, n_shards, args
+        _dc_local_scan(ops, flipped, t1_red, t2_red, block), mesh, n_shards,
+        args, tracer=tracer,
     )
 
     t1_count = _unroute(t1c, res.src, res.valid, cap, jnp.int32(0))
@@ -363,6 +379,7 @@ def _grouped_candidates_sharded(
     n_shards: int,
     capacity_factor: float,
     strip_rows: Optional[int] = None,
+    tracer=None,
 ):
     """Sharded ``group_distinct_candidates``: route rows by the group key so
     each group lives whole on one shard, group locally, un-route."""
@@ -370,14 +387,16 @@ def _grouped_candidates_sharded(
     dtypes = [c.dtype for c in key_cols] + [value_col.dtype]
     payload = [_transport(c) for c in key_cols] + [_transport(value_col)]
     res, factor, retries = _route(
-        _combine_keys(key_cols), payload, scope, mesh, n_shards, capacity_factor
+        _combine_keys(key_cols), payload, scope, mesh, n_shards,
+        capacity_factor, tracer=tracer,
     )
     n_keys = len(key_cols)
     keys_r = [_untransport(res.payload[..., i], dtypes[i]) for i in range(n_keys)]
     value_r = _untransport(res.payload[..., n_keys], dtypes[n_keys])
 
     cand, count, violated, overflow = _per_shard(
-        _fd_local_group(k), mesh, n_shards, (tuple(keys_r), value_r, res.valid)
+        _fd_local_group(k), mesh, n_shards, (tuple(keys_r), value_r, res.valid),
+        tracer=tracer,
     )
     return (
         _unroute(cand, res.src, res.valid, cap, jnp.zeros((), value_col.dtype)),
@@ -397,6 +416,7 @@ def detect_fd_sharded_info(
     n_shards: Optional[int] = None,
     capacity_factor: float = CAPACITY_FACTOR,
     strip_rows: Optional[int] = None,
+    tracer=None,
 ) -> Tuple[FDDetectResult, ShardedDetectInfo]:
     """Sharded ``detect_fd``: lhs groups route whole onto one shard; the
     swapped P(lhs | rhs) grouping (single-attribute lhs) uses a second
@@ -412,12 +432,13 @@ def detect_fd_sharded_info(
 
     rhs_cand, rhs_count, violated, overflow, info = _grouped_candidates_sharded(
         lhs_cols, rhs_col, scope, k, mesh, n_shards, capacity_factor,
-        strip_rows=strip_rows,
+        strip_rows=strip_rows, tracer=tracer,
     )
     lhs_cand = lhs_count = None
     if len(fd.lhs) == 1:
         lhs_cand, lhs_count, _, ovf2, _ = _grouped_candidates_sharded(
-            [rhs_col], lhs_cols[0], scope, k, mesh, n_shards, capacity_factor
+            [rhs_col], lhs_cols[0], scope, k, mesh, n_shards, capacity_factor,
+            tracer=tracer,
         )
         overflow = overflow | ovf2
     det = FDDetectResult(violated, rhs_cand, rhs_count, lhs_cand, lhs_count, overflow)

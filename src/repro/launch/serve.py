@@ -55,7 +55,13 @@ class ServeOptions:
     ``ingest_chunks`` x ``ingest_rows`` rows are held back from the seed
     instance and streamed through ``QueryServer.ingest`` between query
     bursts — the ingest-while-serving workload (DESIGN.md §12).  Zero
-    (the default) serves a fixed instance."""
+    (the default) serves a fixed instance.
+
+    ``trace`` names a Chrome trace-event JSON to dump the run's spans to
+    (DESIGN.md §13): the whole stack — executor, server, background
+    cleaner — records into one tracer, the file loads in Perfetto, and
+    the driver prints the per-phase rollup.  None (the default) disables
+    tracing entirely (the strict no-op tracer)."""
 
     sessions: int = 4
     requests: int = 40
@@ -67,6 +73,7 @@ class ServeOptions:
     ingest_chunks: int = 0
     ingest_rows: int = 0
     seed: int = 0
+    trace: str | None = None  # Chrome trace JSON output path (§13)
 
     @property
     def fd_increment_rows(self) -> int:
@@ -88,7 +95,7 @@ class ServeOptions:
             increment_rows=args.increment_rows,
             increment_strips=args.increment_strips,
             ingest_chunks=args.ingest_chunks, ingest_rows=args.ingest_rows,
-            seed=args.seed,
+            seed=args.seed, trace=args.trace,
         )
 
 
@@ -129,6 +136,8 @@ def run_queries(opts: ServeOptions) -> None:
     from repro.core.operators import GroupBySpec, Pred, Query
     from repro.core.relation import make_relation
     from repro.data.generators import hospital_like
+    from repro.obs import Tracer, format_rollup, rollup, write_trace
+    from repro.obs.trace import NULL_TRACER
     from repro.service import BackgroundCleaner, QueryServer
 
     # generate the FULL dataset (seed + held-back stream) in one draw, so the
@@ -163,9 +172,13 @@ def run_queries(opts: ServeOptions) -> None:
         FD("zc", "zip", "city"),
         DC("bq", [Atom("beds", "<", "beds"), Atom("quality", ">", "quality")]),
     ]
+    # one tracer for the whole stack (DESIGN.md §13): the server and the
+    # background cleaner default their seams to the executor's tracer
+    tracer = Tracer() if opts.trace else NULL_TRACER
     daisy = Daisy(
         {"h": rel}, {"h": rules},
         DaisyConfig(use_cost_model=False, expected_queries=opts.requests),
+        tracer=tracer,
     )
     server = QueryServer(daisy, max_batch=opts.max_batch)
     cleaner = None
@@ -260,6 +273,18 @@ def run_queries(opts: ServeOptions) -> None:
     for s in snap["sessions"][:4]:
         print(f"  {s['sid']}: answered {s['answered']} "
               f"({s['cached_answers']} from cache)")
+    for kind, lat in snap.get("latency", {}).items():
+        print(
+            f"  latency[{kind}]: p50 {lat['p50_s']*1e3:.2f}ms "
+            f"p95 {lat['p95_s']*1e3:.2f}ms p99 {lat['p99_s']*1e3:.2f}ms "
+            f"({lat['count']} samples)"
+        )
+    if opts.trace:
+        events = tracer.events()
+        write_trace(opts.trace, events, origin=tracer.created)
+        print(f"  trace: {len(events)} spans -> {opts.trace} "
+              f"(Perfetto-loadable; {tracer.dropped} dropped)")
+        print(format_rollup(rollup(events)))
 
 
 def main():
@@ -291,6 +316,12 @@ def main():
     ap.add_argument(
         "--ingest-rows", type=int, default=0,
         help="rows per streamed append (held back from the seed instance)",
+    )
+    ap.add_argument(
+        "--trace", default=None, metavar="OUT.json",
+        help="dump a Chrome trace-event JSON of the serving run "
+             "(DESIGN.md §13; load it in Perfetto, or summarize with "
+             "tools/trace_summary.py)",
     )
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()

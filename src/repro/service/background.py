@@ -89,12 +89,17 @@ class BackgroundCleaner:
         increment_rows: int = 512,
         increment_strips: int = 1,
         idle_wait: float = 0.02,
+        tracer=None,
     ):
         self.daisy = daisy
         self.server = server
         self.metrics = metrics if metrics is not None else (
             server.metrics if server is not None else ServiceMetrics()
         )
+        # observability seam (DESIGN.md §13): defaults to the executor's
+        # tracer (the server shares it too), so increments, yields and
+        # preemption waits land in the same trace as the serving spans.
+        self.tracer = tracer if tracer is not None else daisy.tracer
         self.increment_rows = increment_rows
         # DC increments clean this many ledger strips per lock hold
         # (DESIGN.md §11) — the DC analogue of ``increment_rows``
@@ -204,7 +209,9 @@ class BackgroundCleaner:
                 continue
             top = self._ranked[0]
             t0 = time.perf_counter()
-            with daisy.lock:
+            with self.tracer.span(
+                "bg.increment", table=top.table, rule=top.rule
+            ) as sp, daisy.lock:
                 d0, r0 = daisy.detect_calls, daisy.repair_calls
                 step_rep = daisy.clean_scope_increment(
                     top.table, top.rule,
@@ -212,16 +219,19 @@ class BackgroundCleaner:
                     max_strips=self.increment_strips,
                 )
                 if step_rep is None:  # raced warm / stale ranking entry
+                    sp.set(raced_warm=True)
                     self._ranked.pop(0)
                     continue
                 dd = daisy.detect_calls - d0
                 rd = daisy.repair_calls - r0
                 completed = daisy.cold_count(top.table, top.rule) == 0
                 progress = daisy.ledger.progress()
+                sp.set(mode=step_rep.mode, completed=completed)
             if completed:
                 self._ranked.pop(0)
             seconds = time.perf_counter() - t0
             self.metrics.observe_background(dd, rd, seconds, completed)
+            self.metrics.observe_latency("bg-increment", seconds)
             self.metrics.observe_ledger(progress)
             return IncrementReport(
                 table=top.table,
@@ -241,6 +251,7 @@ class BackgroundCleaner:
         while max_increments is None or done < max_increments:
             if self.preempted():
                 self.metrics.observe_bg_yield()
+                self.tracer.instant("bg.yield")
                 break
             if self.step() is None:
                 break
@@ -259,7 +270,14 @@ class BackgroundCleaner:
         while not self._stop.is_set():
             if self.server is not None and self.preempted():
                 self.metrics.observe_bg_yield()
+                self.tracer.instant("bg.yield")
+                t0 = time.perf_counter()
                 self.server.wait_idle(self.idle_wait)
+                # how long foreground pressure kept the cleaner off the
+                # lock — the preemption-latency track (DESIGN.md §13)
+                self.tracer.record(
+                    "bg.preempted", t0, time.perf_counter() - t0
+                )
                 continue
             if self.step() is None:
                 self._stop.wait(warm_wait)

@@ -6,12 +6,18 @@ background cleaner.
 Thread-safety contract: the foreground observers (``observe_hit``,
 ``observe_execution``, ``observe_work``) and the step/idle counters are
 mutated by the single serving thread only; the background observers
-(``observe_background``, ``observe_bg_yield``) are mutated by the cleaner
-thread under ``_bg_lock``.  All counters are monotone host ints/floats,
-so ``snapshot()`` — which reads both groups — is always a consistent
-*approximation* under concurrency and exact once both threads quiesce.
-It returns only JSON-serializable scalars plus the last few serialized
-``StepReport`` dicts (``StepReport.asdict``) for drill-down.
+(``observe_background``, ``observe_bg_yield``, ``observe_ledger``) are
+mutated by the cleaner thread under ``_bg_lock``, and ``snapshot()``
+acquires that same lock to read the ``bg_*`` group and the ledger
+progress — the background section of a snapshot is therefore an exact
+point-in-time read, never a torn one (an increment's detect/repair/busy
+deltas land atomically).  Foreground counters are single-writer monotone
+host ints/floats read without a lock, so across the two groups a snapshot
+is a consistent approximation under concurrency and exact once both
+threads quiesce.  It returns only JSON-serializable scalars plus the last
+few serialized ``StepReport`` dicts (``StepReport.asdict``) for
+drill-down, and — when latencies were observed — per-ticket-class
+p50/p95/p99 under ``"latency"`` (DESIGN.md §13).
 
 The two derived numbers the layer exists for:
 
@@ -30,6 +36,8 @@ import dataclasses
 import threading
 import time
 from typing import Dict, List
+
+from repro.obs.hist import LatencyHistogram
 
 
 @dataclasses.dataclass
@@ -77,6 +85,11 @@ class ServiceMetrics:
     max_reports: int = 32
     recent_reports: List[Dict[str, object]] = dataclasses.field(default_factory=list)
     started: float = dataclasses.field(default_factory=time.perf_counter)
+    # end-to-end latency histograms per ticket class ("query" / "ingest" /
+    # "bg-increment"), DESIGN.md §13: log-scale buckets, so percentiles
+    # come without retained samples.  Each histogram locks internally;
+    # the dict itself is only grown under ``_bg_lock``.
+    latency: Dict[str, LatencyHistogram] = dataclasses.field(default_factory=dict)
     _bg_lock: threading.Lock = dataclasses.field(
         default_factory=threading.Lock, repr=False, compare=False
     )
@@ -137,6 +150,16 @@ class ServiceMetrics:
         with self._bg_lock:
             self.bg_yields += 1
 
+    def observe_latency(self, kind: str, seconds: float) -> None:
+        """Record one end-to-end latency sample for a ticket class
+        (``"query"`` / ``"ingest"`` from the serving thread,
+        ``"bg-increment"`` from the cleaner thread).  Thread-safe."""
+        hist = self.latency.get(kind)
+        if hist is None:
+            with self._bg_lock:
+                hist = self.latency.setdefault(kind, LatencyHistogram())
+        hist.observe(seconds)
+
     def observe_ledger(self, progress: Dict[str, Dict[str, int]]) -> None:
         """Store the latest per-scope ledger progress (strips done / total,
         cold rows — ``WorkLedger.progress()``, DESIGN.md §11).  Called by
@@ -174,7 +197,24 @@ class ServiceMetrics:
 
     def snapshot(self) -> Dict[str, object]:
         """JSON-serializable counter snapshot with foreground/background
-        attribution nested under ``foreground``/``background``."""
+        attribution nested under ``foreground``/``background`` and
+        per-ticket-class latency percentiles under ``latency``.
+
+        The background section (``bg_*`` counters, ledger progress) is
+        read under ``_bg_lock`` — the same lock every cleaner-thread
+        observer writes under — so it is an exact point-in-time view, not
+        a torn read racing a concurrent increment."""
+        with self._bg_lock:
+            background = {
+                "increments": self.bg_increments,
+                "detect_calls": self.bg_detect_calls,
+                "repair_calls": self.bg_repair_calls,
+                "scopes_completed": self.bg_scopes_completed,
+                "yields": self.bg_yields,
+                "busy_s": round(self.bg_busy_s, 6),
+            }
+            ledger = {k: dict(v) for k, v in self.ledger_progress.items()}
+            latency = dict(self.latency)
         return {
             "queries": self.queries,
             "steps": self.steps,
@@ -199,17 +239,13 @@ class ServiceMetrics:
                 "detect_calls": self.detect_calls,
                 "repair_calls": self.repair_calls,
             },
-            "background": {
-                "increments": self.bg_increments,
-                "detect_calls": self.bg_detect_calls,
-                "repair_calls": self.bg_repair_calls,
-                "scopes_completed": self.bg_scopes_completed,
-                "yields": self.bg_yields,
-                "busy_s": round(self.bg_busy_s, 6),
-            },
+            "background": background,
             # per-scope warmup progress (strips done / total), so operators
             # and benchmarks report HOW warm each rule is, not only detect
             # counts (DESIGN.md §11)
-            "ledger": {k: dict(v) for k, v in self.ledger_progress.items()},
+            "ledger": ledger,
+            # p50/p95/p99 per ticket class (query / ingest / bg-increment),
+            # DESIGN.md §13
+            "latency": {k: h.snapshot() for k, h in latency.items()},
             "recent_reports": list(self.recent_reports),
         }

@@ -66,6 +66,9 @@ class Ticket:
     deps: Tuple[Tuple[str, str], ...] = ()
     kind: str = "query"
     ingest: Optional[Tuple[str, Dict[str, object]]] = None  # (table, rows)
+    # perf_counter stamp set at submit: the serving thread derives queue-wait
+    # spans and end-to-end latency histograms from it (DESIGN.md §13)
+    submitted: float = 0.0
     event: threading.Event = dataclasses.field(default_factory=threading.Event)
     result: Optional[object] = None  # DaisyResult / IngestReport once served
     cached: bool = False

@@ -63,11 +63,19 @@ class QueryServer:
         cache: Optional[ResultCache] = None,
         metrics: Optional[ServiceMetrics] = None,
         max_batch: int = 8,
+        tracer=None,
     ):
         self.daisy = daisy
         self.cache = cache if cache is not None else ResultCache()
         self.metrics = metrics if metrics is not None else ServiceMetrics()
         self.max_batch = max_batch
+        # observability seam (DESIGN.md §13): defaults to the executor's
+        # tracer so one ``Daisy(tracer=...)`` wires the whole stack.  Spans:
+        # per-ticket queue-wait (on a synthetic "queue" track — it overlaps
+        # serving-thread spans), batch formation, cache lookup, execute,
+        # commit, ingest barriers, idle waits.  End-to-end ticket latency
+        # feeds ``metrics.observe_latency`` per ticket class.
+        self.tracer = tracer if tracer is not None else daisy.tracer
         self.sessions: Dict[str, Session] = {}
         self._pending: Deque[Ticket] = deque()
         self._lock = threading.Lock()
@@ -114,6 +122,7 @@ class QueryServer:
                 query=query,
                 fingerprint=query_fingerprint(query),
                 deps=rule_deps(query, self.daisy.rules),
+                submitted=time.perf_counter(),
             )
             self._seq += 1
             self._pending.append(ticket)
@@ -147,6 +156,7 @@ class QueryServer:
                 fingerprint=f"ingest:{self._seq}",
                 kind="ingest",
                 ingest=(table, rows),
+                submitted=time.perf_counter(),
             )
             self._seq += 1
             self._pending.append(ticket)
@@ -183,7 +193,10 @@ class QueryServer:
             return 0
         try:
             executed_this_step: set = set()
-            for group in batch_tickets(batch, self.daisy.rules):
+            with self.tracer.span("serve.batch", tickets=len(batch)) as sp:
+                groups = batch_tickets(batch, self.daisy.rules)
+                sp.set(groups=len(groups))
+            for group in groups:
                 for ticket in group:
                     self._serve(ticket, executed_this_step)
         finally:
@@ -202,10 +215,13 @@ class QueryServer:
         if ticket.kind == "ingest":
             self._serve_ingest(ticket)
             return
+        self._record_queue_wait(ticket)
         with daisy.lock:
             d0, r0 = daisy.detect_calls, daisy.repair_calls
-            vector = daisy.scope_versions(ticket.deps)
-            result = self.cache.get(ticket.fingerprint, vector)
+            with self.tracer.span("serve.cache_lookup", seq=ticket.seq) as sp:
+                vector = daisy.scope_versions(ticket.deps)
+                result = self.cache.get(ticket.fingerprint, vector)
+                sp.set(hit=result is not None)
             if result is not None:
                 ticket.cached = True
                 self.metrics.observe_hit(
@@ -213,7 +229,10 @@ class QueryServer:
                 )
             else:
                 try:
-                    result = daisy.execute(ticket.query)
+                    with self.tracer.span(
+                        "serve.execute", seq=ticket.seq, table=ticket.query.table
+                    ):
+                        result = daisy.execute(ticket.query)
                 except Exception as exc:  # surface to the caller, keep serving
                     self.metrics.errors += 1
                     # partial cleaning work before the failure still happened
@@ -224,12 +243,21 @@ class QueryServer:
                     ticket.session.fail()
                     ticket.event.set()
                     return
-                self.cache.put(
-                    ticket.fingerprint, daisy.scope_versions(ticket.deps), result
-                )
-                executed_this_step.add(ticket.fingerprint)
-                self.metrics.observe_execution(result.report)
-            self.metrics.observe_work(daisy.detect_calls - d0, daisy.repair_calls - r0)
+            if not ticket.cached:
+                # a pure cache hit publishes nothing, so only executed
+                # results get a commit span — keeping the disabled-tracer
+                # tax on the hit path to two no-op call sites (the <= 3%
+                # overhead gate in tests/test_obs.py)
+                with self.tracer.span("serve.commit", seq=ticket.seq):
+                    self.cache.put(
+                        ticket.fingerprint, daisy.scope_versions(ticket.deps),
+                        result,
+                    )
+                    executed_this_step.add(ticket.fingerprint)
+                    self.metrics.observe_execution(result.report)
+            self.metrics.observe_work(
+                daisy.detect_calls - d0, daisy.repair_calls - r0
+            )
             ticket.result = result
             ticket.clean_version = daisy.clean_version
         ticket.session.complete(
@@ -242,6 +270,21 @@ class QueryServer:
             )
         )
         ticket.event.set()
+        if ticket.submitted:
+            self.metrics.observe_latency(
+                "query", time.perf_counter() - ticket.submitted
+            )
+
+    def _record_queue_wait(self, ticket: Ticket) -> None:
+        """Span from submit to the moment serving starts, on the synthetic
+        "queue" track (it overlaps serving-thread spans, so it must not
+        break their nesting — obs/trace.py's thread contract)."""
+        if ticket.submitted and self.tracer:
+            now = time.perf_counter()
+            self.tracer.record(
+                "serve.queue_wait", ticket.submitted, now - ticket.submitted,
+                thread="queue", seq=ticket.seq, kind=ticket.kind,
+            )
 
     def _serve_ingest(self, ticket: Ticket) -> None:
         """Apply one queued append under the executor lock (DESIGN.md §12).
@@ -250,9 +293,14 @@ class QueryServer:
         needed here."""
         daisy = self.daisy
         table, rows = ticket.ingest
+        self._record_queue_wait(ticket)
         with daisy.lock:
             try:
-                report = daisy.ingest(table, rows)
+                with self.tracer.span(
+                    "serve.ingest", seq=ticket.seq, table=table
+                ) as sp:
+                    report = daisy.ingest(table, rows)
+                    sp.set(rows=report.rows)
             except Exception as exc:  # surface to the caller, keep serving
                 self.metrics.errors += 1
                 ticket.error = exc
@@ -262,6 +310,10 @@ class QueryServer:
             ticket.result = report
             ticket.clean_version = daisy.clean_version
         ticket.event.set()
+        if ticket.submitted:
+            self.metrics.observe_latency(
+                "ingest", time.perf_counter() - ticket.submitted
+            )
 
     # ------------------------------------------------------------ lifecycle
     def drain(self) -> int:
@@ -288,9 +340,10 @@ class QueryServer:
             with self._work:
                 if self._stopping and not self._pending:
                     return
-                t0 = time.perf_counter()
-                self._work.wait(timeout=idle_wait)
-                self.metrics.observe_idle(time.perf_counter() - t0)
+                with self.tracer.span("serve.idle"):
+                    t0 = time.perf_counter()
+                    self._work.wait(timeout=idle_wait)
+                    self.metrics.observe_idle(time.perf_counter() - t0)
 
     def stop(self) -> None:
         """Refuse new submissions and wake the serving thread to exit after

@@ -10,13 +10,15 @@ Four checks, all static (stdlib only — the CI docs job runs without jax):
 2. **Markdown links.**  Every relative link target in README.md and
    DESIGN.md must exist, and every ``#fragment`` must resolve to a
    heading of the target file (GitHub-style slugs).
-3. **Service docstrings.**  Every public module/class/function/method in
-   ``src/repro/service/`` must carry a docstring — the layer's
-   thread-safety contracts live there (DESIGN.md §9/§10), so a missing
-   docstring is missing documentation of who may touch what under which
-   lock.
-4. **Declared public surface.**  ``repro.core``, ``repro.service``, and
-   ``repro.dist`` declare their stable API via ``__all__``: every public
+3. **Service/obs docstrings.**  Every public module/class/function/method
+   in ``src/repro/service/`` and ``src/repro/obs/`` must carry a
+   docstring — the service layer's thread-safety contracts and the
+   tracing layer's clock/no-op contracts live there (DESIGN.md §9/§10,
+   §13), so a missing docstring is missing documentation of who may
+   touch what under which lock.
+4. **Declared public surface.**  ``repro.core``, ``repro.service``,
+   ``repro.dist``, and ``repro.obs`` declare their stable API via
+   ``__all__``: every public
    name the package ``__init__`` binds must appear in ``__all__`` and
    vice versa, so a re-export added without declaring it (or a stale
    ``__all__`` entry after a rename) fails the docs job, not a user's
@@ -102,7 +104,8 @@ def markdown_problems() -> list[str]:
     return problems
 
 
-# --------------------------------------------------------- service docstrings
+# ----------------------------------------------------- service/obs docstrings
+DOCSTRING_DIRS = ("service", "obs")
 def _missing_docstrings(tree: ast.Module, rel: str) -> list[str]:
     missing = []
     if ast.get_docstring(tree) is None:
@@ -128,12 +131,14 @@ def _missing_docstrings(tree: ast.Module, rel: str) -> list[str]:
 
 
 def service_docstring_problems() -> list[str]:
-    """Undocumented public symbols under src/repro/service/ (ast-based, so
-    the check needs no imports and runs in the bare docs job)."""
+    """Undocumented public symbols under src/repro/service/ and
+    src/repro/obs/ (ast-based, so the check needs no imports and runs in
+    the bare docs job)."""
     problems = []
-    for path in sorted((ROOT / "src" / "repro" / "service").glob("*.py")):
-        rel = str(path.relative_to(ROOT))
-        problems += _missing_docstrings(ast.parse(path.read_text()), rel)
+    for pkg in DOCSTRING_DIRS:
+        for path in sorted((ROOT / "src" / "repro" / pkg).glob("*.py")):
+            rel = str(path.relative_to(ROOT))
+            problems += _missing_docstrings(ast.parse(path.read_text()), rel)
     return problems
 
 
@@ -141,17 +146,18 @@ def public_service_symbols() -> int:
     """Count of public defs the docstring check covers (non-vacuity probe
     for tests)."""
     count = 0
-    for path in sorted((ROOT / "src" / "repro" / "service").glob("*.py")):
-        for node in ast.walk(ast.parse(path.read_text())):
-            if isinstance(
-                node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)
-            ) and not node.name.startswith("_"):
-                count += 1
+    for pkg in DOCSTRING_DIRS:
+        for path in sorted((ROOT / "src" / "repro" / pkg).glob("*.py")):
+            for node in ast.walk(ast.parse(path.read_text())):
+                if isinstance(
+                    node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)
+                ) and not node.name.startswith("_"):
+                    count += 1
     return count
 
 
 # ------------------------------------------------------------- public surface
-PUBLIC_PACKAGES = ("core", "service", "dist")
+PUBLIC_PACKAGES = ("core", "service", "dist", "obs")
 
 
 def _bound_public_names(tree: ast.Module) -> set[str]:

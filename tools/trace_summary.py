@@ -1,0 +1,64 @@
+#!/usr/bin/env python
+"""Summarize a Chrome trace-event JSON dump produced by ``--trace``
+(DESIGN.md §13).
+
+    PYTHONPATH=src python tools/trace_summary.py --trace out.json [--top K]
+
+Loads the dump back into ``SpanEvent``s (``repro.obs.load_trace``), then
+prints the per-phase cost rollup (count, inclusive total, exclusive
+self-time, slowest instance — largest self-time first) and the K slowest
+individual spans with their attrs.  The same numbers Perfetto would show
+interactively, but greppable — CI logs and benchmark JSON artifacts
+carry the identical rollup, so a regression can be pinned to a phase
+without opening a UI.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def summarize(path: str, top_k: int = 10) -> str:
+    """The printed summary for one trace file (pure; tested directly)."""
+    from repro.obs import format_rollup, load_trace, rollup, top_spans
+
+    events = load_trace(path)
+    if not events:
+        return f"{path}: no spans"
+    t_lo = min(e.t0 for e in events)
+    t_hi = max(e.t0 + e.dur for e in events)
+    lines = [
+        f"{path}: {len(events)} spans across "
+        f"{len({e.thread for e in events})} tracks, "
+        f"{t_hi - t_lo:.3f}s span window",
+        "",
+        format_rollup(rollup(events)),
+        "",
+        f"top {top_k} slowest spans:",
+    ]
+    for ev in top_spans(events, k=top_k):
+        attrs = " ".join(f"{k}={v}" for k, v in sorted(ev.attrs.items()))
+        lines.append(
+            f"  {ev.dur*1e3:>9.1f}ms {ev.name:<24} [{ev.thread}] {attrs}"
+        )
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    """CLI entry point: ``--trace`` file(s) to summarize, ``--top K``."""
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--trace", required=True, nargs="+", metavar="OUT.json",
+        help="trace file(s) written by --trace / repro.obs.write_trace",
+    )
+    ap.add_argument("--top", type=int, default=10, metavar="K",
+                    help="how many slowest spans to list (default 10)")
+    args = ap.parse_args(argv)
+    for path in args.trace:
+        print(summarize(path, top_k=args.top))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
