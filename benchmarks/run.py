@@ -36,6 +36,7 @@ from benchmarks import (
     fig_dist_detect,
     serve_bg_warmup,
     serve_ingest,
+    serve_overload,
     serve_throughput,
     table5_accuracy,
     table8_exploratory,
@@ -54,6 +55,7 @@ MODULES = [
     ("serve", serve_throughput),
     ("serve_bg", serve_bg_warmup),
     ("serve_ingest", serve_ingest),
+    ("serve_overload", serve_overload),
     ("table5", table5_accuracy),
     ("table8", table8_exploratory),
 ]

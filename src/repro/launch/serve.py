@@ -61,7 +61,15 @@ class ServeOptions:
     (DESIGN.md §13): the whole stack — executor, server, background
     cleaner — records into one tracer, the file loads in Perfetto, and
     the driver prints the per-phase rollup.  None (the default) disables
-    tracing entirely (the strict no-op tracer)."""
+    tracing entirely (the strict no-op tracer).
+
+    ``qos`` turns on traffic shaping (DESIGN.md §14): the submit queue
+    becomes weighted-fair over sessions, requests carry SLO classes (the
+    driver mixes ``interactive`` and ``batch``), and per-class latency
+    percentiles are reported.  ``overload_depth`` > 0 additionally arms
+    admission control: once the queue is deeper than that, sheddable
+    (interactive) requests are answered from the version-vector cache
+    with an explicit staleness tag instead of queueing."""
 
     sessions: int = 4
     requests: int = 40
@@ -74,6 +82,8 @@ class ServeOptions:
     ingest_rows: int = 0
     seed: int = 0
     trace: str | None = None  # Chrome trace JSON output path (§13)
+    qos: bool = False  # weighted-fair queue + SLO classes (§14)
+    overload_depth: int = 0  # 0 = never shed; >0 arms stale-serve shedding
 
     @property
     def fd_increment_rows(self) -> int:
@@ -96,6 +106,7 @@ class ServeOptions:
             increment_strips=args.increment_strips,
             ingest_chunks=args.ingest_chunks, ingest_rows=args.ingest_rows,
             seed=args.seed, trace=args.trace,
+            qos=args.qos, overload_depth=args.overload,
         )
 
 
@@ -138,7 +149,7 @@ def run_queries(opts: ServeOptions) -> None:
     from repro.data.generators import hospital_like
     from repro.obs import Tracer, format_rollup, rollup, write_trace
     from repro.obs.trace import NULL_TRACER
-    from repro.service import BackgroundCleaner, QueryServer
+    from repro.service import BackgroundCleaner, QoSPolicy, QueryServer
 
     # generate the FULL dataset (seed + held-back stream) in one draw, so the
     # same --seed with/without ingest sees the same rows — only delivery
@@ -180,7 +191,12 @@ def run_queries(opts: ServeOptions) -> None:
         DaisyConfig(use_cost_model=False, expected_queries=opts.requests),
         tracer=tracer,
     )
-    server = QueryServer(daisy, max_batch=opts.max_batch)
+    # traffic shaping (DESIGN.md §14): weighted-fair queue + SLO classes;
+    # overload_depth > 0 arms the stale-serve shed path
+    policy = (
+        QoSPolicy(overload_depth=opts.overload_depth) if opts.qos else None
+    )
+    server = QueryServer(daisy, max_batch=opts.max_batch, qos=policy)
     cleaner = None
     if opts.background:
         # serving thread + cleaner thread: the cleaner warms cold scopes
@@ -224,7 +240,10 @@ def run_queries(opts: ServeOptions) -> None:
         session = sessions[i % opts.sessions]
         # zipf-ish revisit pattern: hot views dominate
         idx = min(int(rng.zipf(1.7)) - 1, len(pool) - 1)
-        tickets.append(server.submit(session, pool[idx]))
+        # under --qos, mix classes: every 4th request is a batch report,
+        # the rest are interactive lookups (the WFQ keeps both flowing)
+        slo = ("batch" if opts.qos and i % 4 == 3 else "interactive")
+        tickets.append(server.submit(session, pool[idx], slo=slo))
     # any chunks the burst schedule didn't reach still stream in at the tail
     while next_chunk < len(chunks):
         tickets.append(server.ingest("h", chunks[next_chunk]))
@@ -270,6 +289,17 @@ def run_queries(opts: ServeOptions) -> None:
                 f"  ledger {scope}: {prog['strips_done']}/{prog['strips_total']}"
                 f" strips warm, {prog['cold_rows']} cold rows"
             )
+    if opts.qos:
+        qos = snap["qos"]
+        print(
+            f"  qos: shed {qos['shed']} ({qos['shed_stale']} stale-tagged, "
+            f"total staleness {qos['shed_staleness_total']}), "
+            f"cancelled {qos['cancelled']}, "
+            f"deadline misses {qos['deadline_misses']}"
+        )
+        for cls, counts in sorted(qos["by_class"].items()):
+            parts = ", ".join(f"{k} {v}" for k, v in sorted(counts.items()))
+            print(f"    class {cls}: {parts}")
     for s in snap["sessions"][:4]:
         print(f"  {s['sid']}: answered {s['answered']} "
               f"({s['cached_answers']} from cache)")
@@ -316,6 +346,19 @@ def main():
     ap.add_argument(
         "--ingest-rows", type=int, default=0,
         help="rows per streamed append (held back from the seed instance)",
+    )
+    ap.add_argument(
+        "--qos", action="store_true",
+        help="weighted-fair queueing + SLO classes on the submit queue "
+             "(DESIGN.md §14); the driver mixes interactive and batch "
+             "requests and reports per-class latency",
+    )
+    ap.add_argument(
+        "--overload", type=int, default=0, metavar="DEPTH",
+        help="queue depth past which sheddable requests are answered from "
+             "the cache with a staleness tag instead of queueing "
+             "(DESIGN.md §14; 0 = never shed; implies --qos semantics "
+             "only when --qos is set)",
     )
     ap.add_argument(
         "--trace", default=None, metavar="OUT.json",

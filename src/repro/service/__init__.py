@@ -19,7 +19,11 @@ between them:
                  amortized per query, foreground/background attribution;
 * ``background`` the ``BackgroundCleaner``: full-cleans cold rule scopes
                  between serving steps so interactive queries stop paying
-                 even the first-touch detect.
+                 even the first-touch detect;
+* ``qos``        traffic shaping (DESIGN.md §14): SLO classes, the
+                 weighted-fair submit queue with its starvation bound,
+                 and the overload policy that sheds to tagged-stale
+                 cached answers instead of queueing.
 
 Sharing is sound because candidate-overlay merges are commutative and
 associative (Lemma 4, core/update.py) and the executor's checked-bit
@@ -32,16 +36,27 @@ only accelerates that convergence (DESIGN.md §10).
 from repro.service.background import BackgroundCleaner, IncrementReport
 from repro.service.cache import ResultCache
 from repro.service.metrics import ServiceMetrics
+from repro.service.qos import (
+    DEFAULT_SLO_CLASSES,
+    FairQueue,
+    QoSPolicy,
+    SLOClass,
+    vector_staleness,
+)
 from repro.service.scheduler import Ticket, batch_tickets, cluster_key, rule_deps
 from repro.service.server import QueryServer
 from repro.service.session import LineageEntry, Session, SessionLimitError
 
 __all__ = [
     "BackgroundCleaner",
+    "DEFAULT_SLO_CLASSES",
+    "FairQueue",
     "IncrementReport",
     "LineageEntry",
+    "QoSPolicy",
     "QueryServer",
     "ResultCache",
+    "SLOClass",
     "ServiceMetrics",
     "Session",
     "SessionLimitError",
@@ -49,4 +64,5 @@ __all__ = [
     "batch_tickets",
     "cluster_key",
     "rule_deps",
+    "vector_staleness",
 ]

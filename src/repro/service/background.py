@@ -90,12 +90,24 @@ class BackgroundCleaner:
         increment_strips: int = 1,
         idle_wait: float = 0.02,
         tracer=None,
+        policy=None,
     ):
         self.daisy = daisy
         self.server = server
         self.metrics = metrics if metrics is not None else (
             server.metrics if server is not None else ServiceMetrics()
         )
+        # SLO-aware budget (DESIGN.md §14): defaults to the server's qos
+        # policy, so one ``QueryServer(qos=...)`` wires the cleaner too.
+        # When set, each increment's row/strip budget shrinks so one
+        # executor-lock hold fits the tightest latency target among
+        # recently-active classes (``QoSPolicy.cleaner_budget``), sized
+        # against ``_inc_ewma`` — a running estimate of this cleaner's own
+        # increment duration.
+        self.policy = policy if policy is not None else (
+            getattr(server, "qos", None) if server is not None else None
+        )
+        self._inc_ewma: Optional[float] = None
         # observability seam (DESIGN.md §13): defaults to the executor's
         # tracer (the server shares it too), so increments, yields and
         # preemption waits land in the same trace as the serving spans.
@@ -183,6 +195,25 @@ class BackgroundCleaner:
         return prioritize_scopes(scopes)
 
     # ------------------------------------------------------------ increments
+    def budget(self) -> Tuple[int, int]:
+        """The (max_rows, max_strips) for the NEXT increment: the
+        configured base, shrunk by the qos policy so one executor-lock
+        hold fits the tightest latency target among recently-active SLO
+        classes (DESIGN.md §14).  An interactive arrival within the
+        policy's quiet window therefore makes the cleaner take smaller,
+        more preemptible bites — the PR 5 preemption points do the rest.
+        Without a policy or a server this is just the configured base."""
+        rows, strips = self.increment_rows, self.increment_strips
+        if self.policy is None or self.server is None:
+            return rows, strips
+        state = self.server.qos_state()
+        allowance = self.policy.latency_allowance(
+            time.perf_counter(), state["last_arrival"]
+        )
+        return self.policy.cleaner_budget(
+            allowance, self._inc_ewma, rows, strips
+        )
+
     def preempted(self) -> bool:
         """True when foreground tickets are queued — the handoff signal
         checked between increments."""
@@ -208,6 +239,7 @@ class BackgroundCleaner:
                 refreshed = True
                 continue
             top = self._ranked[0]
+            max_rows, max_strips = self.budget()
             t0 = time.perf_counter()
             with self.tracer.span(
                 "bg.increment", table=top.table, rule=top.rule
@@ -215,8 +247,8 @@ class BackgroundCleaner:
                 d0, r0 = daisy.detect_calls, daisy.repair_calls
                 step_rep = daisy.clean_scope_increment(
                     top.table, top.rule,
-                    max_rows=self.increment_rows,
-                    max_strips=self.increment_strips,
+                    max_rows=max_rows,
+                    max_strips=max_strips,
                 )
                 if step_rep is None:  # raced warm / stale ranking entry
                     sp.set(raced_warm=True)
@@ -230,6 +262,12 @@ class BackgroundCleaner:
             if completed:
                 self._ranked.pop(0)
             seconds = time.perf_counter() - t0
+            # duration estimate for the SLO budget control loop (§14):
+            # slow increments shrink the next budget, fast ones let it
+            # climb back toward the configured base
+            self._inc_ewma = seconds if self._inc_ewma is None else (
+                0.7 * self._inc_ewma + 0.3 * seconds
+            )
             self.metrics.observe_background(dd, rd, seconds, completed)
             self.metrics.observe_latency("bg-increment", seconds)
             self.metrics.observe_ledger(progress)

@@ -83,6 +83,17 @@ class ResultCache:
             self._entries.popitem(last=False)
             self.evictions += 1
 
+    def peek(self, fingerprint: str) -> Optional[tuple]:
+        """The stored ``(version, result)`` for a fingerprint WHATEVER its
+        age — the overload shed path's last-known-answer read (DESIGN.md
+        §14).  Unlike ``get`` it mutates nothing: no hit/miss counters, no
+        LRU promotion, and crucially no stale-drop, so an entry stays
+        available for tagged stale serving until capacity evicts it or a
+        regular lookup at a moved version drops it.  The caller tags the
+        answer with ``qos.vector_staleness(version, current)`` and must
+        refuse to shed when that distance is incomputable."""
+        return self._entries.get(fingerprint)
+
     def version_of(self, fingerprint: str):
         """The stored version of an entry (None when absent) — test hook."""
         entry = self._entries.get(fingerprint)

@@ -11,10 +11,17 @@ mutated by the cleaner thread under ``_bg_lock``, and ``snapshot()``
 acquires that same lock to read the ``bg_*`` group and the ledger
 progress — the background section of a snapshot is therefore an exact
 point-in-time read, never a torn one (an increment's detect/repair/busy
-deltas land atomically).  Foreground counters are single-writer monotone
-host ints/floats read without a lock, so across the two groups a snapshot
-is a consistent approximation under concurrency and exact once both
-threads quiesce.  It returns only JSON-serializable scalars plus the last
+deltas land atomically).  The traffic-shaping observers
+(``observe_admitted``, ``observe_shed``, ``observe_cancelled``,
+``observe_deadline_miss``, DESIGN.md §14) may be called from MANY client
+threads — shed and cancel decisions happen on the submitting side — so
+the whole ``qos`` group shares ``_bg_lock`` too: it is the metrics
+object's multi-writer lock, not a cleaner-only one.  Foreground counters
+are single-writer monotone host ints/floats read without a lock, so
+across the groups a snapshot is a consistent approximation under
+concurrency and exact once all threads quiesce.  (``queries`` counts
+tickets the SERVING thread answered; shed tickets are answered at submit
+and counted in ``qos.shed`` — ``snapshot()["answered"]`` is the sum.)  It returns only JSON-serializable scalars plus the last
 few serialized ``StepReport`` dicts (``StepReport.asdict``) for
 drill-down, and — when latencies were observed — per-ticket-class
 p50/p95/p99 under ``"latency"`` (DESIGN.md §13).
@@ -69,6 +76,17 @@ class ServiceMetrics:
     ingested_rows: int = 0
     ingest_pending_deltas: int = 0  # rule scopes that queued an ingest-delta
     serving_idle_s: float = 0.0  # step-loop time spent waiting for work
+    # traffic shaping (DESIGN.md §14) — multi-writer, guarded by _bg_lock:
+    # admission/shed/cancel happen on client threads, deadline accounting
+    # on the serving thread
+    shed: int = 0  # tickets answered stale-from-cache at submit
+    shed_stale: int = 0  # shed answers whose staleness tag was > 0
+    shed_staleness_total: int = 0  # sum of staleness tags (avg = /shed)
+    cancelled: int = 0  # tickets abandoned before serving started
+    deadline_misses: int = 0  # served tickets that blew their deadline
+    # per-SLO-class counters: {class: {"admitted"/"shed"/"cancelled"/
+    # "deadline_misses": n}}
+    by_class: Dict[str, Dict[str, int]] = dataclasses.field(default_factory=dict)
     # background cleaner attribution (DESIGN.md §10)
     bg_increments: int = 0  # clean_scope_increment calls that did work
     bg_detect_calls: int = 0
@@ -145,6 +163,42 @@ class ServiceMetrics:
             if scope_completed:
                 self.bg_scopes_completed += 1
 
+    def _class_counter(self, slo: str, key: str, delta: int = 1) -> None:
+        """Bump one per-class counter (callers hold ``_bg_lock``)."""
+        cls = self.by_class.setdefault(slo, {})
+        cls[key] = cls.get(key, 0) + delta
+
+    def observe_admitted(self, slo: str) -> None:
+        """Record one ticket entering the queue for an SLO class (client
+        threads; thread-safe)."""
+        with self._bg_lock:
+            self._class_counter(slo, "admitted")
+
+    def observe_shed(self, slo: str, staleness: int) -> None:
+        """Record one overload shed: the ticket was answered at submit
+        from the version-vector cache with this explicit staleness tag
+        (client threads; thread-safe)."""
+        with self._bg_lock:
+            self.shed += 1
+            self.shed_staleness_total += staleness
+            if staleness > 0:
+                self.shed_stale += 1
+            self._class_counter(slo, "shed")
+
+    def observe_cancelled(self, slo: str) -> None:
+        """Record one abandoned ticket discarded before any cleaning work
+        (serving thread at pick/serve time; thread-safe anyway)."""
+        with self._bg_lock:
+            self.cancelled += 1
+            self._class_counter(slo, "cancelled")
+
+    def observe_deadline_miss(self, slo: str) -> None:
+        """Record one served ticket that finished past its deadline
+        (serving thread; thread-safe)."""
+        with self._bg_lock:
+            self.deadline_misses += 1
+            self._class_counter(slo, "deadline_misses")
+
     def observe_bg_yield(self) -> None:
         """Record the cleaner deferring to foreground work (cleaner thread)."""
         with self._bg_lock:
@@ -213,10 +267,25 @@ class ServiceMetrics:
                 "yields": self.bg_yields,
                 "busy_s": round(self.bg_busy_s, 6),
             }
+            qos = {
+                "shed": self.shed,
+                "shed_stale": self.shed_stale,
+                "shed_staleness_total": self.shed_staleness_total,
+                "cancelled": self.cancelled,
+                "deadline_misses": self.deadline_misses,
+                "by_class": {k: dict(v) for k, v in self.by_class.items()},
+            }
+            shed = self.shed
             ledger = {k: dict(v) for k, v in self.ledger_progress.items()}
             latency = dict(self.latency)
         return {
             "queries": self.queries,
+            # every admitted-or-shed ticket that got an answer: the serving
+            # thread's count plus the submit-time sheds (DESIGN.md §14)
+            "answered": self.queries + shed,
+            # traffic shaping: sheds, cancels, deadline misses, per-class
+            # counts (DESIGN.md §14)
+            "qos": qos,
             "steps": self.steps,
             "executions": self.executions,
             "cache_hits": self.cache_hits,

@@ -27,10 +27,18 @@ into segments at each ingest ticket, clustering only within a segment, so
 reordering by cluster never moves a query across an append it arrived
 before (or after) — arrival order against ingests is preserved.
 
+Pick order is the OTHER half of scheduling and lives in ``qos.FairQueue``
+(DESIGN.md §14): the server admits each step's batch FIFO or in weighted
+fair order, and only then does ``batch_tickets`` regroup the admitted
+batch by cluster — so fairness decides *who* gets in, clustering decides
+*how cheaply* they are served together.
+
 Thread-safety: everything here is pure functions over immutable inputs
 plus the ``Ticket`` record; a ticket is written by the serving thread and
 waited on via its ``event`` by the submitting thread — fields other than
-``event`` are read by the submitter only after ``event`` is set.
+``event`` are read by the submitter only after ``event`` is set.  The
+one exception is the pending/serving/cancelled state machine, which both
+threads race on and which is guarded by the ticket's own ``_state_lock``.
 """
 
 from __future__ import annotations
@@ -55,7 +63,23 @@ class Ticket:
     ``kind`` is ``"query"`` (the default; ``query`` is set) or ``"ingest"``
     (a streaming append, DESIGN.md §12: ``ingest`` holds ``(table, rows)``
     and ``result`` becomes the ``IngestReport``).  Ingest tickets ride the
-    same submit queue so appends serialize with queries in arrival order."""
+    same submit queue so appends serialize with queries in arrival order.
+
+    Traffic shaping (DESIGN.md §14): ``slo`` names the ticket's service
+    class, ``weight`` its effective WFQ share, and ``start_tag`` /
+    ``finish_tag`` its virtual-time stamps (set by ``qos.FairQueue.push``
+    in fair mode).  ``deadline`` is an *absolute* ``perf_counter`` time
+    for deadline-miss accounting (``None`` = no deadline).  A shed ticket
+    (``shed``) was answered at submit from the version-vector cache;
+    ``staleness`` then carries the explicit vector distance between the
+    answer's stored dependency vector and the current one — an un-shed
+    answer never carries a tag (``None``).
+
+    Lifecycle: ``pending -> serving -> done``, or ``pending -> cancelled``
+    via ``cancel()`` (a timed-out ``wait`` cancels; the server discards
+    cancelled tickets at pick/serve time without doing any cleaning
+    work).  The tiny state machine is the only ticket state two threads
+    race on, and it is guarded by its own lock."""
 
     seq: int
     session: Optional[Session]
@@ -69,18 +93,73 @@ class Ticket:
     # perf_counter stamp set at submit: the serving thread derives queue-wait
     # spans and end-to-end latency histograms from it (DESIGN.md §13)
     submitted: float = 0.0
+    # traffic shaping (DESIGN.md §14)
+    slo: str = "interactive"
+    weight: float = 1.0
+    deadline: Optional[float] = None  # absolute perf_counter deadline
+    start_tag: float = 0.0  # virtual start time (fair mode)
+    finish_tag: float = 0.0  # virtual finish time (fair mode)
+    shed: bool = False  # answered stale-from-cache at submit
+    staleness: Optional[int] = None  # version-vector distance of a shed answer
     event: threading.Event = dataclasses.field(default_factory=threading.Event)
     result: Optional[object] = None  # DaisyResult / IngestReport once served
     cached: bool = False
     clean_version: Optional[int] = None
     error: Optional[BaseException] = None
+    _state: str = dataclasses.field(default="pending", init=False)
+    _state_lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, init=False, repr=False, compare=False
+    )
+
+    # ------------------------------------------------------------- lifecycle
+    def begin_serve(self) -> bool:
+        """Claim the ticket for serving (serving thread).  False iff the
+        ticket was cancelled first — the caller must then skip it without
+        touching the executor (cancellation honored at serve time)."""
+        with self._state_lock:
+            if self._state != "pending":
+                return False
+            self._state = "serving"
+            return True
+
+    def finish_serve(self) -> None:
+        """Mark the ticket served (serving thread; after ``event`` work)."""
+        with self._state_lock:
+            self._state = "done"
+
+    def cancel(self) -> bool:
+        """Abandon a still-pending ticket (submitting thread).  Releases
+        the session's admission slot immediately and guarantees the server
+        will do no detect/repair work for it.  False when serving already
+        started or finished — the result then simply goes unread, and the
+        slot is released by the normal completion path."""
+        with self._state_lock:
+            if self._state != "pending":
+                return False
+            self._state = "cancelled"
+        if self.session is not None:
+            self.session.fail(self.slo)
+        return True
+
+    def is_cancelled(self) -> bool:
+        """True once ``cancel`` won the race (either thread may ask)."""
+        with self._state_lock:
+            return self._state == "cancelled"
 
     def wait(self, timeout: Optional[float] = None):
         """Block until served; returns the ``DaisyResult`` or raises the
         execution error.  Raises ``TimeoutError`` if the server did not
-        answer in time."""
+        answer in time — after CANCELLING the ticket, so an abandoned
+        ticket is never executed with nobody reading the result (its
+        session slot is released here, not at some later serve)."""
         if not self.event.wait(timeout):
-            raise TimeoutError(f"ticket {self.seq} not served within {timeout}s")
+            self.cancel()
+            # cancel() lost only if serving already started; if it also
+            # *finished* in the race window the answer is ready after all
+            if not self.event.is_set():
+                raise TimeoutError(
+                    f"ticket {self.seq} not served within {timeout}s; cancelled"
+                )
         if self.error is not None:
             raise self.error
         return self.result

@@ -33,19 +33,31 @@ case the duplicate re-executes exactly as a serial run would.
 The background handoff signal: ``pending_count`` and ``wait_idle`` let a
 ``BackgroundCleaner`` defer to foreground work — the queue going
 non-empty clears the idle event, draining it sets the event again.
+
+Traffic shaping (DESIGN.md §14): constructed with a ``qos.QoSPolicy``,
+admission changes in three ways while everything above stays true.
+Tickets carry an SLO class and a WFQ weight, and each step's batch is
+picked in weighted fair order (``qos.FairQueue``) instead of FIFO —
+cluster regrouping still happens, but within the fair batch.  Past the
+policy's overload depth, sheddable tickets are answered AT SUBMIT from
+the cache's last-known entry with an explicit ``staleness`` tag instead
+of queueing (``_try_shed`` — it takes ``daisy.lock``, which is why the
+shed gate runs outside the queue lock: ``snapshot`` nests the two locks
+the other way).  And cancelled tickets (a timed-out ``wait``) are
+discarded at pick/serve time without touching the executor.
 """
 
 from __future__ import annotations
 
 import threading
 import time
-from collections import deque
-from typing import Deque, Dict, List, Optional
+from typing import Dict, List, Optional
 
 from repro.core.executor import Daisy
 from repro.core.operators import Query, query_fingerprint
 from repro.service.cache import ResultCache
 from repro.service.metrics import ServiceMetrics
+from repro.service.qos import FairQueue, QoSPolicy, vector_staleness
 from repro.service.scheduler import Ticket, batch_tickets, rule_deps
 from repro.service.session import LineageEntry, Session, SessionLimitError
 
@@ -64,6 +76,7 @@ class QueryServer:
         metrics: Optional[ServiceMetrics] = None,
         max_batch: int = 8,
         tracer=None,
+        qos: Optional[QoSPolicy] = None,
     ):
         self.daisy = daisy
         self.cache = cache if cache is not None else ResultCache()
@@ -76,8 +89,16 @@ class QueryServer:
         # commit, ingest barriers, idle waits.  End-to-end ticket latency
         # feeds ``metrics.observe_latency`` per ticket class.
         self.tracer = tracer if tracer is not None else daisy.tracer
+        # traffic shaping (DESIGN.md §14): None keeps the PR 3 behavior
+        # exactly (FIFO admission, no shedding, no class accounting beyond
+        # the latency histograms); a policy turns on weighted fair
+        # admission, the overload shed gate, and the cleaner's SLO budget.
+        self.qos = qos
         self.sessions: Dict[str, Session] = {}
-        self._pending: Deque[Ticket] = deque()
+        self._queue = FairQueue(qos)
+        # last submit perf_counter stamp per SLO class — what the
+        # background cleaner's latency allowance is computed from (§14)
+        self._last_arrival: Dict[str, float] = {}
         self._lock = threading.Lock()
         self._work = threading.Condition(self._lock)
         # set <=> no ticket queued OR admitted-but-unserved: the background
@@ -104,36 +125,137 @@ class QueryServer:
             return list(self.sessions.values())
 
     # ------------------------------------------------------------ admission
-    def submit(self, session: Session, query: Query) -> Ticket:
-        """Queue a query; thread-safe; raises ``SessionLimitError`` on quota."""
+    def submit(
+        self,
+        session: Session,
+        query: Query,
+        slo: str = "interactive",
+        deadline: Optional[float] = None,
+    ) -> Ticket:
+        """Queue a query; thread-safe; raises ``SessionLimitError`` on
+        quota (total, lifetime, or per-class).
+
+        ``slo`` names the ticket's service class (DESIGN.md §14): with a
+        ``qos`` policy it sets the WFQ weight, the shed eligibility, and
+        the cleaner-budget pressure; without one it is accounting only.
+        ``deadline`` (seconds from now, optional) arms deadline-miss
+        accounting for this ticket.
+
+        Admission control: when the policy says the service is past
+        ``overload_depth`` and the class is sheddable, the ticket is
+        answered HERE — from the cache's last-known entry for its
+        fingerprint, with an explicit ``staleness`` tag (the version-
+        vector distance to the current state) — and never queued.  A
+        fingerprint with no cached entry cannot be shed and queues
+        normally; shedding never happens silently or with the policy
+        disabled."""
+        policy = self.qos
+        if policy is not None:
+            policy.slo(slo)  # unknown class -> KeyError before any state
         try:
-            session.admit()
+            session.admit(slo)
         except SessionLimitError:
             with self._lock:
                 self.metrics.rejected += 1
             raise
+        now = time.perf_counter()
         with self._work:
             if self._stopping:
-                session.fail()
+                session.fail(slo)
                 raise RuntimeError("server is stopping; submission refused")
-            ticket = Ticket(
-                seq=self._seq,
-                session=session,
-                query=query,
-                fingerprint=query_fingerprint(query),
-                deps=rule_deps(query, self.daisy.rules),
-                submitted=time.perf_counter(),
-            )
+            seq = self._seq
             self._seq += 1
-            self._pending.append(ticket)
+            self._last_arrival[slo] = now
+            depth = len(self._queue) + self._inflight_batch
+        self.metrics.observe_admitted(slo)
+        ticket = Ticket(
+            seq=seq,
+            session=session,
+            query=query,
+            fingerprint=query_fingerprint(query),
+            deps=rule_deps(query, self.daisy.rules),
+            submitted=now,
+            slo=slo,
+            weight=policy.weight(session, slo) if policy is not None else 1.0,
+            deadline=(now + deadline) if deadline is not None else None,
+        )
+        # the shed gate runs OUTSIDE the queue lock: it takes the executor
+        # lock (version read + cache peek must be atomic vs the background
+        # cleaner), and daisy.lock must never be acquired while holding
+        # _work — snapshot() nests them the other way around
+        if policy is not None and policy.should_shed(slo, depth):
+            if self._try_shed(ticket):
+                return ticket
+        with self._work:
+            if self._stopping:
+                session.fail(slo)
+                raise RuntimeError("server is stopping; submission refused")
+            self._queue.push(ticket)
             self._idle.clear()
             self._work.notify()
         return ticket
 
-    def query(self, session: Session, query: Query, timeout: Optional[float] = None):
+    def _try_shed(self, ticket: Ticket) -> bool:
+        """Answer an overloaded sheddable ticket from the version-vector
+        cache's last-known entry, tagged with its explicit staleness
+        (DESIGN.md §14).  False when no entry exists or the stored version
+        is incomparable with the current vector — the ticket must then
+        queue; a stale answer is never served untagged."""
+        daisy = self.daisy
+        with daisy.lock:
+            entry = self.cache.peek(ticket.fingerprint)
+            if entry is None:
+                return False
+            stored_version, result = entry
+            current = daisy.scope_versions(ticket.deps)
+            staleness = vector_staleness(stored_version, current)
+            if staleness is None:
+                return False
+            clean_version = daisy.clean_version
+        # claim the ticket so a concurrent cancel cannot double-release the
+        # session slot (the submitter can't have timed out yet, but the
+        # state machine is cheap insurance)
+        if not ticket.begin_serve():
+            return False
+        ticket.shed = True
+        ticket.staleness = staleness
+        ticket.cached = True
+        ticket.result = result
+        ticket.clean_version = clean_version
+        self.metrics.observe_shed(ticket.slo, staleness)
+        ticket.session.complete(
+            LineageEntry(
+                fingerprint=ticket.fingerprint,
+                clean_version=clean_version,
+                result_size=result.report.result_size,
+                cached=True,
+                rules=ticket.deps,
+            ),
+            slo=ticket.slo,
+        )
+        ticket.finish_serve()
+        ticket.event.set()
+        self.tracer.instant(
+            "serve.shed", seq=ticket.seq, slo=ticket.slo, staleness=staleness
+        )
+        self.metrics.observe_latency(
+            ticket.slo, time.perf_counter() - ticket.submitted
+        )
+        return True
+
+    def query(
+        self,
+        session: Session,
+        query: Query,
+        timeout: Optional[float] = None,
+        slo: str = "interactive",
+        deadline: Optional[float] = None,
+    ):
         """Submit and block until answered (requires a running serving
-        thread; synchronous callers use ``submit`` + ``drain`` instead)."""
-        return self.submit(session, query).wait(timeout)
+        thread; synchronous callers use ``submit`` + ``drain`` instead).
+        A timed-out wait CANCELS the ticket (scheduler.Ticket.wait), so an
+        abandoned query is never executed for nobody."""
+        return self.submit(session, query, slo=slo, deadline=deadline).wait(timeout)
 
     def ingest(self, table: str, rows, session: Optional[Session] = None) -> Ticket:
         """Queue a streaming append (DESIGN.md §12); thread-safe.
@@ -159,7 +281,7 @@ class QueryServer:
                 submitted=time.perf_counter(),
             )
             self._seq += 1
-            self._pending.append(ticket)
+            self._queue.push(ticket)
             self._idle.clear()
             self._work.notify()
         return ticket
@@ -168,9 +290,21 @@ class QueryServer:
     def pending_count(self) -> int:
         """Number of unserved foreground tickets (queued plus the batch a
         step is currently serving) — the background cleaner checks this
-        between increments and yields when > 0."""
+        between increments and yields when > 0.  May transiently count a
+        cancelled-but-not-yet-discarded ticket; the next pick corrects it."""
         with self._lock:
-            return len(self._pending) + self._inflight_batch
+            return len(self._queue) + self._inflight_batch
+
+    def qos_state(self) -> Dict[str, object]:
+        """Traffic snapshot for the background cleaner's budget decision
+        (DESIGN.md §14): pending depth (total and per SLO class) and the
+        last arrival stamp per class.  Thread-safe; cheap (host dicts)."""
+        with self._lock:
+            return {
+                "depth": len(self._queue) + self._inflight_batch,
+                "depth_by_class": self._queue.depth_by_class(),
+                "last_arrival": dict(self._last_arrival),
+            }
 
     def wait_idle(self, timeout: Optional[float] = None) -> bool:
         """Block until the pending queue is empty (the handoff signal a
@@ -179,16 +313,17 @@ class QueryServer:
 
     # ------------------------------------------------------------- step loop
     def step(self) -> int:
-        """Admit up to ``max_batch`` pending tickets and serve them grouped
-        by cluster.  Returns the number of tickets served.  Single serving
-        thread only (see module docstring)."""
+        """Admit up to ``max_batch`` pending tickets — FIFO, or in weighted
+        fair order under a qos policy (DESIGN.md §14) — and serve them
+        grouped by cluster.  Returns the number of tickets served.  Single
+        serving thread only (see module docstring)."""
         with self._lock:
-            batch: List[Ticket] = []
-            while self._pending and len(batch) < self.max_batch:
-                batch.append(self._pending.popleft())
+            batch, dropped = self._queue.pop_batch(self.max_batch)
             self._inflight_batch = len(batch)
             if not batch:
                 self._idle.set()
+        for t in dropped:  # cancelled while queued: no work was done
+            self.metrics.observe_cancelled(t.slo)
         if not batch:
             return 0
         try:
@@ -203,7 +338,7 @@ class QueryServer:
             # the cleaner may resume only once the whole batch is answered
             with self._lock:
                 self._inflight_batch = 0
-                if not self._pending:
+                if not len(self._queue):
                     self._idle.set()
         self.metrics.steps += 1
         return len(batch)
@@ -214,6 +349,11 @@ class QueryServer:
         daisy = self.daisy
         if ticket.kind == "ingest":
             self._serve_ingest(ticket)
+            return
+        if not ticket.begin_serve():
+            # cancelled after admission, before serving: honored here — no
+            # detect/repair work, no executor touch, slot already released
+            self.metrics.observe_cancelled(ticket.slo)
             return
         self._record_queue_wait(ticket)
         with daisy.lock:
@@ -240,7 +380,8 @@ class QueryServer:
                         daisy.detect_calls - d0, daisy.repair_calls - r0
                     )
                     ticket.error = exc
-                    ticket.session.fail()
+                    ticket.session.fail(ticket.slo)
+                    ticket.finish_serve()
                     ticket.event.set()
                     return
             if not ticket.cached:
@@ -267,13 +408,20 @@ class QueryServer:
                 result_size=result.report.result_size,
                 cached=ticket.cached,
                 rules=ticket.deps,
-            )
+            ),
+            slo=ticket.slo,
         )
+        ticket.finish_serve()
         ticket.event.set()
+        now = time.perf_counter()
+        if ticket.deadline is not None and now > ticket.deadline:
+            self.metrics.observe_deadline_miss(ticket.slo)
         if ticket.submitted:
-            self.metrics.observe_latency(
-                "query", time.perf_counter() - ticket.submitted
-            )
+            self.metrics.observe_latency("query", now - ticket.submitted)
+            if self.qos is not None:
+                # per-SLO-class percentiles (DESIGN.md §14); keyed by class
+                # name so snapshot()["latency"]["interactive"] is the SLO gate
+                self.metrics.observe_latency(ticket.slo, now - ticket.submitted)
 
     def _record_queue_wait(self, ticket: Ticket) -> None:
         """Span from submit to the moment serving starts, on the synthetic
@@ -293,6 +441,9 @@ class QueryServer:
         needed here."""
         daisy = self.daisy
         table, rows = ticket.ingest
+        if not ticket.begin_serve():
+            self.metrics.observe_cancelled(ticket.slo)
+            return
         self._record_queue_wait(ticket)
         with daisy.lock:
             try:
@@ -304,11 +455,13 @@ class QueryServer:
             except Exception as exc:  # surface to the caller, keep serving
                 self.metrics.errors += 1
                 ticket.error = exc
+                ticket.finish_serve()
                 ticket.event.set()
                 return
             self.metrics.observe_ingest(report)
             ticket.result = report
             ticket.clean_version = daisy.clean_version
+        ticket.finish_serve()
         ticket.event.set()
         if ticket.submitted:
             self.metrics.observe_latency(
@@ -338,7 +491,7 @@ class QueryServer:
                 served_steps += 1
                 continue
             with self._work:
-                if self._stopping and not self._pending:
+                if self._stopping and not len(self._queue):
                     return
                 with self.tracer.span("serve.idle"):
                     t0 = time.perf_counter()

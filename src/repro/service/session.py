@@ -11,9 +11,17 @@ probabilities from what sessions actually query (DESIGN.md §10).
 
 Limits are enforced at submit time: ``max_inflight`` bounds a session's
 concurrently queued tickets (back-pressure per user), ``max_queries``
-bounds its lifetime total (quota).  Violations raise ``SessionLimitError``
-— the server surfaces them to the caller without touching the shared
-executor.
+bounds its lifetime total (quota), and ``class_limits`` bounds the
+inflight tickets of individual SLO classes (DESIGN.md §14 — e.g. cap a
+user's concurrent ``batch`` tickets without touching their interactive
+headroom).  Violations raise ``SessionLimitError`` — the server surfaces
+them to the caller without touching the shared executor.
+
+``weight`` is the session's weighted-fair-queueing share (DESIGN.md
+§14): the server multiplies it by the ticket's SLO-class weight to get
+the effective WFQ weight, so a paying-tier session can be given a larger
+slice of the serving order without starving anyone (the qos module's
+starvation bound is in terms of these weights).
 
 Thread-safety: every mutating method and every reader of compound state
 takes the session's own ``_lock`` (client threads call ``admit``; the
@@ -61,21 +69,34 @@ class Session:
         max_inflight: int = 64,
         max_queries: Optional[int] = None,
         max_lineage: int = 256,
+        weight: float = 1.0,
+        class_limits: Optional[Dict[str, int]] = None,
     ):
+        if weight <= 0.0:
+            raise ValueError(f"session weight must be > 0, got {weight}")
         self.sid = sid if sid is not None else f"s{next(_SIDS)}"
         self.max_inflight = max_inflight
         self.max_queries = max_queries
         self.max_lineage = max_lineage
+        # WFQ share (DESIGN.md §14): effective ticket weight is this times
+        # the SLO-class weight
+        self.weight = float(weight)
+        # per-SLO-class inflight caps (DESIGN.md §14); classes absent from
+        # the mapping are bounded only by ``max_inflight``
+        self.class_limits = dict(class_limits or {})
         self.submitted = 0
         self.inflight = 0
         self.answered = 0
         self.failed = 0
+        self.inflight_by_class: Dict[str, int] = {}
         self.lineage: List[LineageEntry] = []
         self._lock = threading.Lock()
 
     # ------------------------------------------------------------ admission
-    def admit(self) -> None:
-        """Claim one submission slot or raise ``SessionLimitError``."""
+    def admit(self, slo: str = "interactive") -> None:
+        """Claim one submission slot for an SLO class or raise
+        ``SessionLimitError`` (lifetime quota, total inflight, or the
+        class's own inflight cap)."""
         with self._lock:
             if self.max_queries is not None and self.submitted >= self.max_queries:
                 raise SessionLimitError(
@@ -85,21 +106,38 @@ class Session:
                 raise SessionLimitError(
                     f"session {self.sid}: {self.inflight} tickets already in flight"
                 )
+            limit = self.class_limits.get(slo)
+            in_class = self.inflight_by_class.get(slo, 0)
+            if limit is not None and in_class >= limit:
+                raise SessionLimitError(
+                    f"session {self.sid}: {in_class} {slo!r} tickets already "
+                    f"in flight (class limit {limit})"
+                )
             self.submitted += 1
             self.inflight += 1
+            self.inflight_by_class[slo] = in_class + 1
 
-    def complete(self, entry: LineageEntry) -> None:
-        """Record one answered query (serving thread)."""
+    def _release(self, slo: str) -> None:
+        """Give back one inflight slot (callers hold ``_lock``)."""
+        self.inflight -= 1
+        in_class = self.inflight_by_class.get(slo, 0)
+        if in_class > 0:
+            self.inflight_by_class[slo] = in_class - 1
+
+    def complete(self, entry: LineageEntry, slo: str = "interactive") -> None:
+        """Record one answered query (serving thread; ``slo`` must match
+        the class the ticket was admitted under)."""
         with self._lock:
-            self.inflight -= 1
+            self._release(slo)
             self.answered += 1
             self.lineage.append(entry)
             del self.lineage[: -self.max_lineage]
 
-    def fail(self) -> None:
-        """Release the inflight slot of a submission that errored."""
+    def fail(self, slo: str = "interactive") -> None:
+        """Release the inflight slot of a submission that errored or was
+        cancelled (``slo`` must match the admitted class)."""
         with self._lock:
-            self.inflight -= 1
+            self._release(slo)
             self.failed += 1
 
     # ------------------------------------------------------------- reporting
@@ -120,8 +158,10 @@ class Session:
         with self._lock:
             return {
                 "sid": self.sid,
+                "weight": self.weight,
                 "submitted": self.submitted,
                 "inflight": self.inflight,
+                "inflight_by_class": dict(self.inflight_by_class),
                 "answered": self.answered,
                 "failed": self.failed,
                 "cached_answers": sum(e.cached for e in self.lineage),

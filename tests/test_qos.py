@@ -1,0 +1,638 @@
+"""Traffic shaping (DESIGN.md §14): WFQ starvation bound, stale-serve
+soundness, cancellation, deadline accounting, and the overload stress.
+
+The property that anchors the tier: ``qos.FairQueue``'s documented
+starvation bound — a ticket that is its session's ``q``-th pending
+ticket at arrival is served after at most ``q * ceil(W / w) + N`` other
+tickets, where ``W``/``N`` are the total weight / count of sessions
+that ever pushed.  Hypothesis drives adversarial weights and arrival
+interleavings against it; no drawn schedule may starve anyone.
+
+The soundness half: an overload shed answer is bit-identical to the
+cache's stored entry at the version its ``staleness`` tag names, the
+tag equals the version-vector distance exactly, an un-shed answer is
+never tagged, and nothing sheds with the policy disabled — freshness
+degrades *visibly* before latency does, never silently.
+
+The concurrency half (slow lane, ``-m qos``): sixteen client threads
+drive interactive + batch + ingest traffic past the overload depth and
+the final overlays must still equal a Lemma-4 serial reference — the
+shaping layer reorders and sheds, but never loses an update.
+"""
+
+import math
+import threading
+import time
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.constraints import FD
+from repro.core.executor import Daisy, DaisyConfig
+from repro.core.operators import Pred, Query, query_fingerprint
+from repro.core.relation import make_relation
+from repro.data.generators import hospital_like
+from repro.service import (
+    BackgroundCleaner,
+    FairQueue,
+    QoSPolicy,
+    QueryServer,
+    SLOClass,
+    Session,
+    Ticket,
+    batch_tickets,
+    rule_deps,
+    vector_staleness,
+)
+
+pytestmark = pytest.mark.qos
+
+
+# --------------------------------------------------------------------- helpers
+def make_ticket(seq, session, weight=1.0, slo="interactive", kind="query"):
+    """A queue-level ticket: FairQueue needs only seq/session/weight/slo."""
+    return Ticket(
+        seq=seq, session=session, query=None, fingerprint=f"q{seq}",
+        slo=slo, weight=float(weight), kind=kind,
+    )
+
+
+def build_server(qos=None, rows=96, max_batch=4, seed=7):
+    ds = hospital_like(rows, error_frac=0.15, seed=seed)
+    rel = make_relation(ds.data, overlay=["zip", "city"], k=8, rules=["zc"])
+    daisy = Daisy(
+        {"h": rel}, {"h": [FD("zc", "zip", "city")]},
+        DaisyConfig(use_cost_model=False),
+    )
+    return QueryServer(daisy, max_batch=max_batch, qos=qos)
+
+
+# ----------------------------------------------------- WFQ starvation property
+@st.composite
+def wfq_case(draw):
+    """Adversarial weights + arrival order + pop interleaving."""
+    n_sessions = draw(st.integers(min_value=1, max_value=5))
+    weights = [
+        draw(st.integers(min_value=1, max_value=8)) for _ in range(n_sessions)
+    ]
+    arrivals = draw(
+        st.lists(
+            st.integers(min_value=0, max_value=n_sessions - 1),
+            min_size=1, max_size=32,
+        )
+    )
+    # one drawn bit per arrival: pop a ticket right after this push?
+    pops = [draw(st.booleans()) for _ in arrivals]
+    return weights, arrivals, pops
+
+
+@given(wfq_case())
+@settings(max_examples=60)
+def test_wfq_starvation_bound(case):
+    """delay <= q * ceil(W / w_i) + N for every ticket under every drawn
+    schedule (the qos module docstring's bound, popped one at a time —
+    the per-pick regime the proof covers)."""
+    weights, arrivals, pops = case
+    sessions = [
+        Session(sid=f"w{i}", max_inflight=10**6) for i in range(len(weights))
+    ]
+    queue = FairQueue(QoSPolicy())
+    tickets, q_at_arrival, pops_at_push, popped = [], [], [], []
+    pending_per_session = [0] * len(sessions)
+
+    def pop_one():
+        batch, dropped = queue.pop_batch(1)
+        assert not dropped
+        for t in batch:
+            pending_per_session[sessions.index(t.session)] -= 1
+            popped.append(t)
+
+    for seq, (j, do_pop) in enumerate(zip(arrivals, pops)):
+        t = make_ticket(seq, sessions[j], weight=weights[j])
+        pending_per_session[j] += 1
+        q_at_arrival.append(pending_per_session[j])
+        pops_at_push.append(len(popped))
+        tickets.append(t)
+        queue.push(t)
+        if do_pop:
+            pop_one()
+    while len(queue):
+        pop_one()
+
+    assert len(popped) == len(tickets)  # nothing starved or lost
+    pop_pos = {t.seq: i for i, t in enumerate(popped)}
+    ever_pushed = set(arrivals)
+    W = sum(weights[j] for j in ever_pushed)
+    N = len(ever_pushed)
+    for t, q, j, pre in zip(tickets, q_at_arrival, arrivals, pops_at_push):
+        # tickets served between this ticket's arrival and its own pick —
+        # the delay the bound speaks about (pops before its arrival are
+        # another ticket's history, not this one's wait)
+        before = pop_pos[t.seq] - pre
+        bound = q * math.ceil(W / weights[j]) + N
+        assert before <= bound, (
+            f"ticket {t.seq} (session {j}, weight {weights[j]}, q={q}) "
+            f"waited {before} picks > bound {bound} "
+            f"(weights={weights}, arrivals={arrivals}, pops={pops})"
+        )
+
+
+def test_fifo_mode_is_arrival_order():
+    """policy=None keeps the PR 3 deque behavior bit-for-bit: pops come
+    back in arrival order no matter the weights."""
+    queue = FairQueue(None)
+    s = Session(sid="fifo", max_inflight=100)
+    tickets = [make_ticket(i, s, weight=(8.0 if i % 2 else 1.0)) for i in range(9)]
+    for t in tickets:
+        queue.push(t)
+    batch, dropped = queue.pop_batch(100)
+    assert not dropped
+    assert [t.seq for t in batch] == list(range(9))
+    # FIFO mode never stamps virtual-time tags
+    assert all(t.start_tag == 0.0 and t.finish_tag == 0.0 for t in tickets)
+
+
+def test_ingest_barrier_blocks_fair_reordering():
+    """A later light-weight ticket must NOT jump an ingest barrier, even
+    when its virtual start tag is smaller than every queued tag."""
+    queue = FairQueue(QoSPolicy())
+    heavy = Session(sid="heavy", max_inflight=100)
+    light = Session(sid="light", max_inflight=100)
+    pre = [make_ticket(i, heavy, weight=1.0) for i in range(4)]
+    for t in pre:
+        queue.push(t)
+    barrier = make_ticket(4, None, kind="ingest")
+    queue.push(barrier)
+    late = make_ticket(5, light, weight=8.0)
+    queue.push(late)  # start tag 0.0 — smaller than pre[1:]'s tags
+    assert late.start_tag < pre[-1].start_tag
+    order, _ = queue.pop_batch(100)
+    seqs = [t.seq for t in order]
+    assert set(seqs[:4]) == {0, 1, 2, 3}  # whole pre-segment first
+    assert seqs[4] == 4  # then the barrier
+    assert seqs[5] == 5  # the late ticket never crossed it
+
+
+def test_singleton_cluster_not_deferred_by_batching():
+    """Cluster batching composes with fairness without starving an orphan
+    cluster: a weight-1 session's lone off-cluster ticket is picked
+    within its starvation bound even while three weight-8 sessions flood
+    one hot cluster, and same-cluster grouping survives inside batches."""
+    rules = {"h": [FD("zc", "zip", "city")]}
+    hot = Query("h", preds=(Pred("zip", "==", 0),))
+    orphan = Query("h", preds=(Pred("beds", ">=", 400),))  # no rule overlap
+    queue = FairQueue(QoSPolicy())
+    heavies = [Session(sid=f"h{i}", max_inflight=100) for i in range(3)]
+    seq = 0
+    tickets = []
+    for burst in range(12):
+        for s in heavies:
+            t = Ticket(
+                seq=seq, session=s, query=hot,
+                fingerprint=query_fingerprint(hot),
+                deps=rule_deps(hot, rules), weight=8.0,
+            )
+            queue.push(t)
+            tickets.append(t)
+            seq += 1
+    lone = Ticket(
+        seq=seq, session=Session(sid="solo", max_inflight=100), query=orphan,
+        fingerprint=query_fingerprint(orphan),
+        deps=rule_deps(orphan, rules), weight=1.0,
+    )
+    queue.push(lone)
+
+    # q=1, w=1, W=25, N=4 -> the orphan waits at most 29 picks
+    bound = 1 * math.ceil(25 / 1) + 4
+    picked = []
+    while len(queue):
+        batch, _ = queue.pop_batch(8)
+        groups = batch_tickets(batch, rules)
+        # same-cluster tickets stay grouped: one group per distinct cluster
+        assert len(groups) <= 2
+        assert sum(len(g) for g in groups) == len(batch)
+        picked.extend(batch)
+    pos = next(i for i, t in enumerate(picked) if t.seq == lone.seq)
+    assert pos <= bound
+
+
+# -------------------------------------------------------------- vector_staleness
+def test_vector_staleness_contract():
+    assert vector_staleness(3, 5) == 2
+    assert vector_staleness(5, 5) == 0
+    assert vector_staleness(5, 3) is None  # non-monotone
+    assert vector_staleness((1, 2), (3, 2)) == 2
+    assert vector_staleness((1, 2), (1, 2)) == 0
+    assert vector_staleness((1, 2), (0, 9)) is None  # component regressed
+    assert vector_staleness((1, 2), (1, 2, 3)) is None  # shape changed
+    assert vector_staleness((1, 2), 7) is None  # mixed types
+    assert vector_staleness(None, (1, 2)) is None
+
+
+# ------------------------------------------------------- stale-serve soundness
+def test_shed_answer_is_tagged_and_bit_identical():
+    policy = QoSPolicy(overload_depth=1)
+    server = build_server(qos=policy)
+    s = server.open_session("u", max_inflight=100)
+    qa = Query("h", preds=(Pred("zip", "==", 0),))
+    qb = Query("h", preds=(Pred("zip", "==", 1),))
+
+    server.submit(s, qa)
+    server.drain()  # qa cached at its post-execution vector
+    fp = query_fingerprint(qa)
+    stored_version, stored_result = server.cache.peek(fp)
+    baseline_mask = np.asarray(stored_result.mask).copy()
+
+    server.submit(s, qb)
+    server.drain()  # cleaning qb's cluster advances (h, zc) -> qa entry stale
+    deps = rule_deps(qa, server.daisy.rules)
+    current = server.daisy.scope_versions(deps)
+    expected = vector_staleness(stored_version, current)
+    assert expected is not None and expected > 0
+
+    # overload the queue (batch is not sheddable, so these stay queued),
+    # then submit the cached interactive fingerprint past the depth
+    t1 = server.submit(s, qb, slo="batch")
+    t2 = server.submit(s, qb, slo="batch")
+    shed = server.submit(s, qa, slo="interactive")
+
+    assert shed.shed and shed.event.is_set()  # answered AT submit
+    assert shed.cached
+    assert shed.staleness == expected  # tag == exact vector distance
+    assert shed.result is stored_result  # the cache entry itself
+    np.testing.assert_array_equal(np.asarray(shed.result.mask), baseline_mask)
+    # shedding consumed no executor work and the entry was not dropped
+    assert server.cache.peek(fp)[0] == stored_version
+
+    server.drain()
+    # un-shed answers are NEVER tagged
+    for t in (t1, t2):
+        assert t.event.is_set() and not t.shed and t.staleness is None
+
+    snap = server.snapshot()
+    assert snap["qos"]["shed"] == 1
+    assert snap["qos"]["shed_stale"] == 1
+    assert snap["qos"]["shed_staleness_total"] == expected
+    assert snap["qos"]["by_class"]["interactive"]["shed"] == 1
+    assert snap["answered"] == snap["queries"] + 1
+    # session accounting balanced: the shed ticket completed its slot
+    assert s.snapshot()["inflight"] == 0
+
+
+def test_no_shed_without_policy_or_depth():
+    """Disabled shedding never sheds, whatever the queue depth."""
+    for qos in (None, QoSPolicy(overload_depth=0)):
+        server = build_server(qos=qos)
+        s = server.open_session("u", max_inflight=100)
+        qa = Query("h", preds=(Pred("zip", "==", 0),))
+        server.submit(s, qa)
+        server.drain()  # cached — a shed would have an entry to serve
+        tickets = [server.submit(s, qa) for _ in range(6)]
+        assert all(not t.shed and t.staleness is None for t in tickets)
+        assert all(not t.event.is_set() for t in tickets)  # queued, not answered
+        server.drain()
+        assert server.snapshot().get("qos", {"shed": 0})["shed"] == 0
+
+
+def test_uncached_fingerprint_cannot_shed():
+    policy = QoSPolicy(overload_depth=1)
+    server = build_server(qos=policy)
+    s = server.open_session("u", max_inflight=100)
+    qa = Query("h", preds=(Pred("zip", "==", 0),))
+    qb = Query("h", preds=(Pred("zip", "==", 1),))
+    server.submit(s, qa)
+    server.submit(s, qa)
+    fresh = server.submit(s, qb)  # depth 2 > 1, sheddable class, no entry
+    assert not fresh.shed and not fresh.event.is_set()
+    server.drain()
+    assert fresh.result is not None and fresh.staleness is None
+
+
+def test_shed_after_ingest_refuses_incomparable_vector():
+    """An append changes the dependency vector's __rows__ component; the
+    stored entry is then *comparable* (same shape, bumped) — but a shape
+    change (e.g. a new rule) must refuse.  Exercise the monotone-bump
+    path end-to-end and the refusal unit-level."""
+    policy = QoSPolicy(overload_depth=1)
+    server = build_server(qos=policy)
+    s = server.open_session("u", max_inflight=100)
+    qa = Query("h", preds=(Pred("zip", "==", 0),))
+    server.submit(s, qa)
+    server.drain()
+    fp = query_fingerprint(qa)
+    stored_version, _ = server.cache.peek(fp)
+    # stream an append: bumps (h, __rows__) inside qa's dependency vector
+    rows = {
+        k: np.asarray(v[:2]).copy()
+        for k, v in hospital_like(8, error_frac=0.0, seed=1).data.items()
+    }
+    server.ingest("h", rows)
+    server.drain()
+    current = server.daisy.scope_versions(rule_deps(qa, server.daisy.rules))
+    assert vector_staleness(stored_version, current) >= 1
+    server.submit(s, qa, slo="batch")
+    server.submit(s, qa, slo="batch")
+    shed = server.submit(s, qa)
+    assert shed.shed and shed.staleness >= 1
+    server.drain()
+
+
+# ----------------------------------------------------------------- cancellation
+def test_timed_out_wait_cancels_no_work_is_done():
+    """The abandonment fix: a timed-out wait() cancels the ticket, the
+    slot releases immediately, and the server does ZERO detect/repair
+    work for it — the regression the PR closes."""
+    server = build_server()
+    daisy = server.daisy
+    s = server.open_session("u", max_inflight=4)
+    qa = Query("h", preds=(Pred("zip", "==", 0),))
+    t = server.submit(s, qa)
+    with pytest.raises(TimeoutError):
+        t.wait(timeout=0.02)
+    assert t.is_cancelled()
+    assert s.snapshot()["inflight"] == 0  # slot released at cancel time
+    d0, r0 = daisy.detect_calls, daisy.repair_calls
+    assert server.drain() == 0  # discarded at pick, never served
+    assert (daisy.detect_calls, daisy.repair_calls) == (d0, r0)
+    snap = server.snapshot()
+    assert snap["queries"] == 0 and snap["executions"] == 0
+    assert snap["qos"]["cancelled"] == 1
+    # the session can submit again: no slot leak
+    t2 = server.submit(s, qa)
+    server.drain()
+    assert t2.result is not None
+
+
+def test_wait_after_serve_still_returns_result():
+    """cancel() loses the race once serving finished: wait() returns the
+    answer instead of raising."""
+    server = build_server()
+    s = server.open_session("u", max_inflight=4)
+    qa = Query("h", preds=(Pred("zip", "==", 0),))
+    t = server.submit(s, qa)
+    server.drain()
+    assert t.wait(timeout=0.01) is not None  # served; no TimeoutError
+    assert not t.is_cancelled()
+
+
+def test_cancelled_ticket_honored_at_serve_time():
+    """A ticket cancelled after the pick (begin_serve race) is skipped
+    without executor work — the serve-time half of the fix."""
+    server = build_server()
+    s = server.open_session("u", max_inflight=4)
+    qa = Query("h", preds=(Pred("zip", "==", 0),))
+    t = server.submit(s, qa)
+    assert t.cancel()
+    assert not t.begin_serve()  # the serving thread's claim must fail
+    server.drain()
+    assert t.result is None and not t.event.is_set()
+
+
+# ------------------------------------------------------------ deadline + budget
+def test_deadline_miss_accounting_and_class_latency():
+    server = build_server(qos=QoSPolicy())
+    s = server.open_session("u", max_inflight=4)
+    qa = Query("h", preds=(Pred("zip", "==", 0),))
+    server.submit(s, qa, deadline=0.0)  # already past when served
+    server.submit(s, qa, slo="batch", deadline=60.0)  # comfortably met
+    server.drain()
+    snap = server.snapshot()
+    assert snap["qos"]["deadline_misses"] == 1
+    assert snap["qos"]["by_class"]["interactive"]["deadline_misses"] == 1
+    assert "batch" not in snap["qos"]["by_class"] or (
+        "deadline_misses" not in snap["qos"]["by_class"]["batch"]
+    )
+    # per-class latency histograms appear under a policy
+    assert snap["latency"]["interactive"]["count"] == 1
+    assert snap["latency"]["batch"]["count"] == 1
+
+
+def test_unknown_slo_class_is_a_submit_error():
+    server = build_server(qos=QoSPolicy())
+    s = server.open_session("u", max_inflight=4)
+    qa = Query("h", preds=(Pred("zip", "==", 0),))
+    with pytest.raises(KeyError):
+        server.submit(s, qa, slo="platinum")
+    assert s.snapshot()["inflight"] == 0  # refused before admission
+
+
+def test_per_class_session_limits():
+    server = build_server(qos=QoSPolicy())
+    s = server.open_session("u", max_inflight=10, class_limits={"batch": 1})
+    qa = Query("h", preds=(Pred("zip", "==", 0),))
+    server.submit(s, qa, slo="batch")
+    from repro.service import SessionLimitError
+
+    with pytest.raises(SessionLimitError):
+        server.submit(s, qa, slo="batch")
+    server.submit(s, qa, slo="interactive")  # other classes unaffected
+    server.drain()
+    server.submit(s, qa, slo="batch")  # slot came back after completion
+    server.drain()
+
+
+def test_cleaner_budget_control_loop():
+    """Policy-level budget arithmetic plus the cleaner integration: an
+    interactive arrival inside the quiet window shrinks the next
+    increment; a quiet queue restores the configured base."""
+    policy = QoSPolicy()
+    now = time.perf_counter()
+    # allowance: tightest target among recently-active classes
+    assert policy.latency_allowance(now, {}) is None
+    assert policy.latency_allowance(now, {"interactive": now - 0.01}) == 0.1
+    assert policy.latency_allowance(now, {"batch": now - 0.01}) == 2.0
+    assert (
+        policy.latency_allowance(
+            now, {"interactive": now - 0.01, "batch": now - 0.01}
+        )
+        == 0.1
+    )
+    assert policy.latency_allowance(now, {"interactive": now - 10.0}) is None
+    # budget: no allowance -> base; no estimate -> minimal first bite;
+    # slow estimate -> shrink by allowance/estimate; fast -> back to base
+    assert policy.cleaner_budget(None, 1.0, 512, 4) == (512, 4)
+    assert policy.cleaner_budget(0.1, None, 512, 4) == (128, 1)
+    assert policy.cleaner_budget(0.1, 1.0, 512, 4) == (128, 1)
+    assert policy.cleaner_budget(10.0, 0.01, 512, 4) == (512, 4)
+    floor = policy.min_increment_rows
+    assert policy.cleaner_budget(0.001, 1.0, 64, 1) == (min(64, floor), 1)
+
+    server = build_server(qos=policy)
+    cleaner = BackgroundCleaner(
+        server.daisy, server=server, increment_rows=512, increment_strips=4
+    )
+    assert cleaner.policy is policy  # wired from the server's qos
+    assert cleaner.budget() == (512, 4)  # nothing arrived yet
+    s = server.open_session("u", max_inflight=4)
+    cleaner._inc_ewma = 1.0  # pretend increments take 1s vs the 0.1s target
+    server.submit(s, Query("h", preds=(Pred("zip", "==", 0),)))
+    rows, strips = cleaner.budget()  # the arrival is inside quiet_s right now
+    assert rows == 128 and strips == 1
+    server.drain()
+    time.sleep(policy.quiet_s + 0.05)
+    assert cleaner.budget() == (512, 4)  # quiet again: full base
+
+
+def test_default_policy_validation():
+    with pytest.raises(ValueError):
+        SLOClass("bad", weight=0.0)
+    with pytest.raises(ValueError):
+        QoSPolicy(classes=(SLOClass("a", 1.0), SLOClass("a", 2.0)))
+    with pytest.raises(KeyError):
+        QoSPolicy().slo("nope")
+    with pytest.raises(ValueError):
+        Session(sid="w", weight=0.0)
+
+
+# -------------------------------------------------------- overload stress (slow)
+N_SEED = 192
+CHUNK = 16
+N_CHUNKS = 4
+N_CLIENTS = 16
+QUERIES_PER_CLIENT = 6
+
+
+def _build_daisy(data):
+    rel = make_relation(data, overlay=["zip", "city"], k=8, rules=["zc"])
+    return Daisy(
+        {"h": rel}, {"h": [FD("zc", "zip", "city")]},
+        DaisyConfig(use_cost_model=False),
+    )
+
+
+def _candidate_state(rel, n_rows):
+    state = {}
+    for attr in ("zip", "city"):
+        vals = np.asarray(rel.cand[attr])
+        probs = np.asarray(rel.probs(attr))
+        state[attr] = [
+            {
+                (int(v), round(float(p), 5))
+                for v, p in zip(vals[r], probs[r])
+                if p > 0
+            }
+            for r in range(n_rows)
+        ]
+    return state
+
+
+@pytest.mark.slow
+def test_overload_stress_no_lost_updates():
+    """16 client threads past capacity, mixing interactive (sheddable),
+    batch, and streamed ingest.  Must hold simultaneously: every ticket
+    is served or *explicitly* shed (tagged), ingest barriers keep arrival
+    order (a query queued behind its append sees the appended rows), and
+    the final overlays equal the Lemma-4 serial reference — shaping never
+    loses an update."""
+    total_rows = N_SEED + N_CHUNKS * CHUNK
+    ds = hospital_like(total_rows, error_frac=0.15, seed=23)
+    data = dict(ds.data)
+    seed_data = {k: v[:N_SEED] for k, v in data.items()}
+    chunks = [
+        {
+            k: v[N_SEED + c * CHUNK: N_SEED + (c + 1) * CHUNK]
+            for k, v in data.items()
+        }
+        for c in range(N_CHUNKS)
+    ]
+    daisy = _build_daisy(seed_data)
+    policy = QoSPolicy(overload_depth=6)
+    server = QueryServer(daisy, max_batch=4, qos=policy)
+    serving = threading.Thread(target=server.run, name="serving")
+    serving.start()
+
+    pool = [Query("h", preds=(Pred("zip", "==", g),)) for g in range(6)]
+    errors = []
+    submitted = []
+    submitted_lock = threading.Lock()
+    # one dedicated ingest client keeps chunk order deterministic so the
+    # serial reference sees the same final row layout
+    barrier_checks = []
+
+    def ingest_client():
+        session = server.open_session("ingestor", max_inflight=64)
+        try:
+            for c, chunk in enumerate(chunks):
+                ing = server.ingest("h", chunk)
+                # submitted BEHIND the append without waiting: the barrier
+                # must serve it over the appended instance
+                after = server.submit(session, pool[c % len(pool)], slo="batch")
+                with submitted_lock:
+                    submitted.append(after)
+                rep = ing.wait(timeout=300)
+                assert rep.rows == CHUNK
+                res = after.wait(timeout=300)
+                barrier_checks.append(
+                    (len(np.asarray(res.mask)), N_SEED + (c + 1) * CHUNK)
+                )
+        except BaseException as exc:
+            errors.append(("ingestor", exc))
+
+    def client(tid):
+        session = server.open_session(f"c{tid}", max_inflight=64)
+        try:
+            for i in range(QUERIES_PER_CLIENT):
+                q = pool[(tid + i) % len(pool)]
+                slo = "batch" if (tid + i) % 3 == 0 else "interactive"
+                t = server.submit(session, q, slo=slo)
+                with submitted_lock:
+                    submitted.append(t)
+                t.wait(timeout=300)
+        except BaseException as exc:
+            errors.append((tid, exc))
+
+    threads = [threading.Thread(target=ingest_client, name="ingest-client")]
+    threads += [
+        threading.Thread(target=client, args=(tid,), name=f"client{tid}")
+        for tid in range(N_CLIENTS - 1)
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=600)
+    assert not any(t.is_alive() for t in threads)
+    assert not errors, f"client failures: {errors}"
+
+    # every cluster fully cleaned over the final instance before comparing
+    sweep = server.open_session("sweep", max_inflight=64)
+    final = [server.submit(sweep, q, slo="batch") for q in pool]
+    for t in final:
+        t.wait(timeout=300)
+    server.stop()
+    serving.join(timeout=60)
+    assert not serving.is_alive()
+
+    # --- every ticket served or explicitly shed, none starved, none lost
+    n_queries = len(submitted) + len(final)
+    for t in submitted + final:
+        assert t.event.is_set()
+        if t.shed:
+            assert t.staleness is not None  # shed => always tagged
+        else:
+            assert t.staleness is None  # served fresh => never tagged
+        assert t.error is None
+    snap = server.snapshot()
+    assert snap["answered"] == n_queries
+    assert snap["qos"]["cancelled"] == 0
+    assert snap["errors"] == 0
+    assert snap["ingests"] == N_CHUNKS
+
+    # --- ingest barriers kept arrival order
+    for got_rows, min_rows in barrier_checks:
+        assert got_rows >= min_rows
+
+    # --- no lost overlay updates: Lemma-4 serial reference
+    serial = _build_daisy(seed_data)
+    for chunk in chunks:
+        serial.ingest("h", chunk)
+    for q in pool:
+        serial.execute(q)
+    got = _candidate_state(daisy.db["h"], total_rows)
+    want = _candidate_state(serial.db["h"], total_rows)
+    for attr in ("zip", "city"):
+        for r in range(total_rows):
+            assert got[attr][r] == want[attr][r], (
+                f"{attr} row {r}: {got[attr][r]} != {want[attr][r]}"
+            )
