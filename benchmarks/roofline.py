@@ -1,6 +1,11 @@
 """Roofline report: assemble experiments/dryrun/*.json into the §Roofline
 table (per arch x shape x mesh: the three terms, dominant bottleneck,
-useful-FLOPs ratio, memory fit).
+useful-FLOPs ratio, memory fit) — plus, when ``benchmarks.kernel_sparsity``
+has written measured-launch records (``{"kernel": ...}``), a second table
+of MEASURED kernel geometry: tiles launched vs dense, bytes moved,
+bytes/tile, and the fraction of the cold work's memory bound the launch
+achieved (DESIGN.md §15).  Analytic dryrun estimates and measured launch
+records live side by side in the same directory.
 
     PYTHONPATH=src python -m benchmarks.roofline [--dir experiments/dryrun]
                                                  [--md out.md]
@@ -49,12 +54,50 @@ HEADER = [
     "dominant", "roofline_frac", "useful_flops", "peak_GiB", "fits_16G",
 ]
 
+KERNEL_HEADER = [
+    "kernel", "n", "block", "sparsity", "tiles", "dense_tiles",
+    "launch_frac", "MiB_moved", "MiB_dense", "bytes_per_tile", "mem_bound_frac",
+]
+
+
+def kernel_table(recs: List[Dict]) -> str | None:
+    """Measured-launch table from ``kernel_sparsity`` records — launch
+    geometry and modeled bytes straight from the scans that actually ran,
+    not the analytic dryrun estimator."""
+    rows = []
+    for r in sorted(recs, key=lambda r: (r["kernel"]["name"],
+                                         r["kernel"].get("sparsity", 0))):
+        k = r["kernel"]
+        rows.append([
+            k["name"], str(k["n"]), str(k["block"]),
+            f"{k.get('sparsity', 0):.0%}",
+            str(k["tiles_launched"]), str(k["tiles_total"]),
+            f"{k['tiles_launched'] / max(k['tiles_total'], 1):.3f}",
+            f"{k['bytes_moved'] / 2**20:.3f}",
+            f"{k.get('bytes_dense', k['bytes_moved']) / 2**20:.3f}",
+            str(k["bytes_per_tile"]),
+            f"{k.get('memory_bound_fraction', 1.0):.3f}",
+        ])
+    if not rows:
+        return None
+    lines = ["| " + " | ".join(KERNEL_HEADER) + " |",
+             "|" + "---|" * len(KERNEL_HEADER)]
+    lines += ["| " + " | ".join(row) + " |" for row in rows]
+    return "\n".join(lines)
+
 
 def run(quick: bool = False, dir_: str = "experiments/dryrun",
         md_out: str | None = None):
-    recs = [r for r in load(dir_) if "roofline" in r]
+    all_recs = load(dir_)
+    kern = kernel_table([r for r in all_recs if "kernel" in r])
+    recs = [r for r in all_recs if "roofline" in r]
     if not recs:
         print("no dry-run records found — run repro.launch.dryrun --all first")
+        if kern:
+            print("\n## Measured kernel launches\n" + kern)
+            if md_out:
+                with open(md_out, "w") as f:
+                    f.write(kern + "\n")
         return
     recs.sort(key=lambda r: (r["arch"], r["shape"], len(r["mesh"])))
     lines = ["| " + " | ".join(HEADER) + " |",
@@ -62,6 +105,8 @@ def run(quick: bool = False, dir_: str = "experiments/dryrun",
     for r in recs:
         lines.append("| " + " | ".join(fmt_row(r)) + " |")
     table = "\n".join(lines)
+    if kern:
+        table += "\n\n## Measured kernel launches\n" + kern
     print(table)
     if md_out:
         with open(md_out, "w") as f:

@@ -34,6 +34,7 @@ from benchmarks import (
     fig12_dc_inequality,
     fig13_join_queries,
     fig_dist_detect,
+    kernel_sparsity,
     serve_bg_warmup,
     serve_ingest,
     serve_overload,
@@ -52,6 +53,7 @@ MODULES = [
     ("fig12", fig12_dc_inequality),
     ("fig13", fig13_join_queries),
     ("fig_dist", fig_dist_detect),
+    ("kernel_sparsity", kernel_sparsity),
     ("serve", serve_throughput),
     ("serve_bg", serve_bg_warmup),
     ("serve_ingest", serve_ingest),

@@ -182,16 +182,25 @@ def dc_partial_reuse_gate(n: int, seed: int = 17):
         done += 1
     q = Query("t", preds=(Pred("price", ">=", 0.0),))
     pairs = {}
+    tiles = {}
     masks = {}
     for name, daisy in (("cold", cold), ("half-cleaned", half)):
         p0 = daisy.detect_pairs
+        t0 = daisy.tiles_launched
         res = daisy.execute(q)
         pairs[name] = daisy.detect_pairs - p0
+        tiles[name] = daisy.tiles_launched - t0
         masks[name] = np.asarray(res.mask)
         assert res.report.steps[0].mode == "full", res.report.steps[0]
     assert pairs["half-cleaned"] < pairs["cold"], (
         f"half-cleaned scope did not reuse background strips "
         f"({pairs['half-cleaned']} vs {pairs['cold']} pairs)"
+    )
+    # DESIGN.md §15: the candidate-bound savings must be LAUNCH savings too —
+    # the checked strips' tile pairs never enter the worklist
+    assert tiles["half-cleaned"] < tiles["cold"], (
+        f"half-cleaned scope did not launch fewer tiles "
+        f"({tiles['half-cleaned']} vs {tiles['cold']})"
     )
     np.testing.assert_array_equal(masks["cold"], masks["half-cleaned"])
     for attr in ("price", "disc"):
@@ -206,9 +215,11 @@ def dc_partial_reuse_gate(n: int, seed: int = 17):
     print(
         f"serve_bg_warmup partial-reuse: {done} background strip increments "
         f"-> foreground full clean {pairs['cold']} -> "
-        f"{pairs['half-cleaned']} detect pairs, answers bit-identical"
+        f"{pairs['half-cleaned']} detect pairs "
+        f"({tiles['cold']} -> {tiles['half-cleaned']} tiles launched), "
+        f"answers bit-identical"
     )
-    return pairs
+    return pairs, tiles
 
 
 def run(quick: bool = False, tracer=None):
@@ -284,8 +295,9 @@ def run(quick: bool = False, tracer=None):
         "service+bg last cycle not fully cache-served"
     )
 
-    # gate 4 (ISSUE 5): strip-level partial-work reuse on a DC scope
-    dc_partial_reuse_gate(240 if quick else 1024)
+    # gate 4 (ISSUE 5 + §15): strip-level partial-work reuse on a DC scope,
+    # visible in detect pairs AND in launched tiles
+    _, reuse_tiles = dc_partial_reuse_gate(240 if quick else 1024)
 
     # gate 5 (DESIGN.md §13, under --trace only): the span union explains
     # >= 90% of the measured serving wall-clock (queue-wait lives on its
@@ -322,10 +334,17 @@ def run(quick: bool = False, tracer=None):
             "fg_detects_reduced": fg_bg < fg_svc,
             "steady_state_cached": cyc_bg[-1]["hits"] == cyc_bg[-1]["views"],
             "partial_reuse": True,
+            "tiles_drop_with_warmup": (
+                reuse_tiles["half-cleaned"] < reuse_tiles["cold"]
+            ),
             "trace_coverage": cov,
         },
         "headline": {
             "queries": n_queries,
+            "tiles_launched_fg": snap_bg["tiles_launched"],
+            "tiles_skipped_fg": snap_bg["tiles_skipped"],
+            "reuse_tiles_cold": reuse_tiles["cold"],
+            "reuse_tiles_half": reuse_tiles["half-cleaned"],
             "fg_detect_service": fg_svc,
             "fg_detect_service_bg": fg_bg,
             "bg_detect": snap_bg["background"]["detect_calls"],

@@ -140,6 +140,11 @@ class CostModel:
     # foreground OR background — so the Inequality-(1) flip can fire
     # mid-scope instead of waiting on query-coverage estimates.
     cold_fraction: Optional[float] = None
+    # measured tile-level launch sparsity of the last full-mode DC scan
+    # (tiles launched / dense tiles, DESIGN.md §15): the kernel-truth
+    # counterpart of ``cold_fraction`` — identical for block-aligned strips,
+    # but measured from the worklist the scan actually launched
+    tile_ratio: Optional[float] = None
 
     # -------------------------------------------------------------- records
     def record(self, q_i: int, e_i: int, d_i: float, eps_i: int) -> None:
@@ -149,6 +154,11 @@ class CostModel:
         """Record the ledger's current cold-strip fraction for this scope
         (the executor calls this from every ``_mark`` commit)."""
         self.cold_fraction = min(max(float(cold_fraction), 0.0), 1.0)
+
+    def observe_tile_sparsity(self, ratio: float) -> None:
+        """Record a full-mode scan's measured launch ratio — tiles launched
+        over the dense tile count (DESIGN.md §15)."""
+        self.tile_ratio = min(max(float(ratio), 0.0), 1.0)
 
     def observe_detect_cost(self, cost: float) -> None:
         """Record an observed full-detect cost (e.g. ``sharded_detect_cost``
@@ -259,8 +269,14 @@ class CostModel:
         frac = unseen / max(self.n, 1)
         if self.cold_fraction is not None:
             frac = min(frac, self.cold_fraction)
+        detect_frac = frac
+        if self.tile_ratio is not None:
+            # the detect term prices kernel launches, and the worklist scan
+            # measures exactly what fraction of the dense grid it launches
+            # (DESIGN.md §15); repair/update stay row-fraction priced
+            detect_frac = min(detect_frac, self.tile_ratio)
         return (
-            frac * self.df_effective
+            detect_frac * self.df_effective
             + eps_left * frac * self.p
             + frac * self.n
         )

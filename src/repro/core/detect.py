@@ -87,6 +87,11 @@ class DCDetectResult(NamedTuple):
     t2_count: jnp.ndarray  # (cap,) int32
     t1_stat: Tuple[jnp.ndarray, ...]  # n_atoms x (cap,)
     t2_stat: Tuple[jnp.ndarray, ...]  # n_atoms x (cap,)
+    # launch-geometry telemetry of the scan that produced this detection
+    # (DESIGN.md §15); zero on paths that predate tile accounting.
+    tiles_launched: int = 0
+    tiles_total: int = 0
+    bytes_moved: int = 0
 
 
 # For a violating atom ``t1.l op t2.r``:
@@ -104,9 +109,13 @@ def detect_dc(
     block: int = 256,
     row_blocks: Tuple[int, int] | None = None,
     col_blocks: Tuple[int, int] | None = None,
+    row_block_ids=None,
+    col_block_ids=None,
+    encode: bool = True,
 ) -> DCDetectResult:
     """Detect DC violations between ``row_scope`` rows (role t1) and
-    ``col_scope`` rows (role t2), both directions.
+    ``col_scope`` rows (role t2), both directions — one fused kernel launch
+    covering both roles (DESIGN.md §15).
 
     ``row_blocks=(lo, hi)`` is the partition-strip entry (DESIGN.md §11):
     only the row blocks of that strip are launched — the executor passes the
@@ -118,28 +127,69 @@ def detect_dc(
     appended column strip, costing O(checked x fresh) tiles.  Both roles
     are launched over the same partner strip (the t2 role flips the atoms
     but its partners live in ``col_scope`` all the same).
+
+    ``row_block_ids`` / ``col_block_ids`` generalize both to arbitrary
+    block-id worklists — the ledger's cold geometry (DESIGN.md §15):
+    checked x checked tile pairs are simply absent from the launch.
+
+    ``encode=True`` lets the planner compress atom columns (int8/bf16/rank
+    codes) where the exactness proof holds; stats are decoded back to the
+    original value space before returning, so results are bit-identical
+    either way.
     """
     row_scope = row_scope & rel.valid
     col_scope = col_scope & rel.valid
-    l_cols = [rel.columns[a.left] for a in dc.atoms]
-    r_cols = [rel.columns[a.right] for a in dc.atoms]
     ops = [a.op for a in dc.atoms]
     reduces = [_T1_REDUCE[op] for op in ops]
-
-    # role t1: rows are t1, partners t2 in col_scope; stat over partner r.
-    t1_count, t1_stat = kops.dc_role_scan(
-        l_cols, r_cols, ops, row_scope, col_scope, reduces, block=block,
-        row_blocks=row_blocks, col_blocks=col_blocks,
-    )
-    # role t2: rows are t2 — atom becomes row.r flip(op) col.l; stat over
-    # partner l with the same reduce orientation seen from the row's side.
     flipped = [flip_op(op) for op in ops]
     t2_reduces = [_T1_REDUCE[op] for op in flipped]
-    t2_count, t2_stat = kops.dc_role_scan(
-        r_cols, l_cols, flipped, row_scope, col_scope, t2_reduces, block=block,
-        row_blocks=row_blocks, col_blocks=col_blocks,
+
+    attrs = {a.left for a in dc.atoms} | {a.right for a in dc.atoms}
+    plan = (
+        kops.plan_dc_encodings(
+            {name: rel.columns[name] for name in attrs},
+            [(a.left, a.right, a.op) for a in dc.atoms],
+        )
+        if encode
+        else None
     )
-    return DCDetectResult(t1_count, t2_count, tuple(t1_stat), tuple(t2_stat))
+    if plan is not None:
+        # one encoded array per attribute: same-attribute atoms keep sharing
+        # one object, so the fused kernel's column dedup still applies.
+        cols = {name: kops.encode_column(rel.columns[name], plan[name]) for name in attrs}
+    else:
+        cols = {name: rel.columns[name] for name in attrs}
+    l_cols = [cols[a.left] for a in dc.atoms]
+    r_cols = [cols[a.right] for a in dc.atoms]
+
+    # role t1: rows are t1, partners t2 in col_scope; stat over partner r.
+    # role t2: rows are t2 — atom becomes row.r flip(op) col.l; stat over
+    # partner l with the same reduce orientation seen from the row's side.
+    res = kops.dc_pair_scan(
+        l_cols, r_cols, ops, flipped, row_scope, col_scope,
+        reduces, t2_reduces, block=block,
+        row_blocks=row_blocks, col_blocks=col_blocks,
+        row_block_ids=row_block_ids, col_block_ids=col_block_ids,
+    )
+    t1_stat, t2_stat = res.t1_stat, res.t2_stat
+    if plan is not None:
+        t1_stat = tuple(
+            kops.decode_stat(
+                s, res.t1_count, plan[a.right], rel.columns[a.right].dtype, red
+            )
+            for s, a, red in zip(t1_stat, dc.atoms, reduces)
+        )
+        t2_stat = tuple(
+            kops.decode_stat(
+                s, res.t2_count, plan[a.left], rel.columns[a.left].dtype, red
+            )
+            for s, a, red in zip(t2_stat, dc.atoms, t2_reduces)
+        )
+    return DCDetectResult(
+        res.t1_count, res.t2_count, tuple(t1_stat), tuple(t2_stat),
+        tiles_launched=res.tiles.launched, tiles_total=res.tiles.total,
+        bytes_moved=res.tiles.bytes_moved,
+    )
 
 
 def dc_violation_count(result: DCDetectResult) -> jnp.ndarray:
@@ -192,6 +242,9 @@ def detect_auto(
     n_shards: int | None = None,
     row_blocks: Tuple[int, int] | None = None,
     col_blocks: Tuple[int, int] | None = None,
+    row_block_ids=None,
+    col_block_ids=None,
+    encode: bool = True,
     strip_rows: int | None = None,
     tracer=None,
 ) -> DetectResult:
@@ -206,9 +259,12 @@ def detect_auto(
     FD rules use ``row_scope`` as the group-by scope and ``k`` for the
     candidate width; ``col_scope``/``block``/``row_blocks``/``col_blocks``
     are DC-only (``col_scope`` is required for DCs).  ``row_blocks`` /
-    ``col_blocks`` strip-scope the DENSE DC scan only (the sharded path
-    re-routes rows, so strip locality does not survive the shuffle; its
-    scopes already shrink to the strip's rows).  ``strip_rows`` feeds the
+    ``col_blocks`` — and their worklist generalizations ``row_block_ids``
+    / ``col_block_ids`` (DESIGN.md §15) — strip-scope the DENSE DC scan
+    only (the sharded path re-routes rows, so strip locality does not
+    survive the shuffle; its scopes already shrink to the strip's rows,
+    and its per-shard launches self-restrict to the routed occupancy).
+    ``strip_rows`` feeds the
     sharded path's per-shard strip-coverage report (DESIGN.md §11).
     ``tracer`` (DESIGN.md §13) reaches only the sharded path, which spans
     its shuffle and per-shard scans; the dense scans are one kernel call
@@ -239,6 +295,8 @@ def detect_auto(
             detect_dc(
                 rel, rule, row_scope, col_scope, block=block,
                 row_blocks=row_blocks, col_blocks=col_blocks,
+                row_block_ids=row_block_ids, col_block_ids=col_block_ids,
+                encode=encode,
             ),
             None,
         )

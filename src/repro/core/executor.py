@@ -101,6 +101,10 @@ class DaisyConfig:
     # None -> one detect tile (dc_block); always rounded up to a whole
     # number of tiles so strips align with the dc_pairs grid.
     strip_rows: Optional[int] = None
+    # compressed atom encodings (DESIGN.md §15): let the DC detect planner
+    # scan int8/bf16/rank-code columns where the exactness proof holds.
+    # Results are bit-identical either way — this is a bandwidth knob.
+    kernel_encodings: bool = True
 
 
 @dataclasses.dataclass
@@ -117,6 +121,11 @@ class StepReport:
     # (benchmarks/serve_bg_warmup.py gates that a half-cleaned scope costs
     # strictly fewer pairs than a cold one, DESIGN.md §11)
     detect_pairs: int = 0
+    # kernel launch geometry (DESIGN.md §15): DC tile pairs this step's
+    # scans launched vs skipped by the ledger-masked worklist — the
+    # block-sparsity gauge next to the row-level detect_pairs one
+    tiles_launched: int = 0
+    tiles_skipped: int = 0
     relax_iterations: int = 0
     relax_converged: bool = True
     alg2_accuracy: float = 1.0
@@ -202,6 +211,8 @@ class Daisy:
         self.detect_calls = 0
         self.repair_calls = 0
         self.detect_pairs = 0
+        self.tiles_launched = 0
+        self.tiles_skipped = 0
         self._lock = threading.RLock()
         self.ledger = WorkLedger(self.config.strip_rows, self.config.dc_block)
         if self.config.collect_stats:
@@ -712,14 +723,14 @@ class Daisy:
             row_scope = jnp.asarray(checked) & rel.valid
             if not bool(np.asarray(jnp.any(row_scope & rel.valid))):
                 continue
-            row_blocks = self._covering_blocks(row_scope)
+            row_block_ids = self._active_blocks(row_scope)
             col_blocks = (ent.lo // block, -(-ent.hi // block))
             rep.answer_size += int(np.asarray(jnp.sum(fresh & rel.valid)))
             # dense scan only: the sharded path has no partner-side
             # restriction, and a delta is small by construction
             rel, det = self._dc_detect_repair(
-                rel, dc, row_scope, fresh, row_blocks, None, cm, rep,
-                col_blocks=col_blocks,
+                rel, dc, row_scope, fresh, None, None, cm, rep,
+                col_blocks=col_blocks, row_block_ids=row_block_ids,
             )
             rep.repaired += int(np.asarray(jnp.sum(
                 ((det.t1_count > 0) | (det.t2_count > 0)) & row_scope
@@ -855,13 +866,14 @@ class Daisy:
     # ------------------------------------------------------------- DC steps
     def _dc_detect_repair(
         self, rel, dc, row_scope, col_scope, row_blocks, mesh, cm, rep,
-        col_blocks=None,
+        col_blocks=None, row_block_ids=None, col_block_ids=None,
     ):
         """One detect + repair-candidate pass of the DC increment engine:
         scan ``row_scope x col_scope`` (strip-scoped to ``row_blocks`` /
-        ``col_blocks`` when given), merge the role fixes for ``row_scope``
-        rows, account the scanned comparison space.  Returns
-        ``(rel, detect_result)``."""
+        ``col_blocks``, or block-sparse via ``row_block_ids`` /
+        ``col_block_ids``, DESIGN.md §15), merge the role fixes for
+        ``row_scope`` rows, account the scanned comparison space and the
+        launch geometry.  Returns ``(rel, detect_result)``."""
         table = rep.table
         self.detect_calls += 1
         rows = int(np.asarray(jnp.sum(row_scope & rel.valid)))
@@ -873,31 +885,52 @@ class Daisy:
             pairs=rows * cols,
             row_blocks=_blocks_attr(row_blocks),
             col_blocks=_blocks_attr(col_blocks),
+            row_block_ids=None if row_block_ids is None else len(row_block_ids),
+            col_block_ids=None if col_block_ids is None else len(col_block_ids),
         ) as sp:
             det, sinfo = detect_auto(
                 rel, dc, row_scope, col_scope, block=self.config.dc_block,
                 mesh=mesh, n_shards=self.config.detect_shards,
                 row_blocks=row_blocks, col_blocks=col_blocks,
+                row_block_ids=row_block_ids, col_block_ids=col_block_ids,
                 strip_rows=self.ledger.strip_rows, tracer=self.tracer,
+                encode=self.config.kernel_encodings,
             )
             if sinfo is not None:
                 rep.detect_path = "sharded"
                 self._observe_sharded(table, dc.name, sinfo, cm)
-            sp.set(path=rep.detect_path)
+            launched = int(getattr(det, "tiles_launched", 0))
+            skipped = max(int(getattr(det, "tiles_total", 0)) - launched, 0)
+            rep.tiles_launched += launched
+            rep.tiles_skipped += skipped
+            self.tiles_launched += launched
+            self.tiles_skipped += skipped
+            scope = self.ledger.scope(table, dc.name)
+            if scope is not None:
+                scope.note_tiles(launched, skipped)
+            if cm is not None and rep.mode == "full" and det.tiles_total:
+                # the measured tile-level sparsity of a full-mode scan —
+                # the cost model's detect term refines on it (DESIGN.md §15)
+                cm.observe_tile_sparsity(launched / det.tiles_total)
+            sp.set(
+                path=rep.detect_path,
+                tiles_launched=launched, tiles_skipped=skipped,
+            )
         self.repair_calls += 1
         with self.tracer.span("clean.repair", rule=dc.name, table=table):
             deltas = dc_repair_candidates(rel, dc, det, row_scope, k=self.config.k)
             rel = self._apply(rel, deltas, table, dc.name)
         return rel, det
 
-    def _covering_blocks(self, mask) -> Optional[Tuple[int, int]]:
-        """Covering kernel-grid block range of a row mask's nonzero extent
-        (None for an empty mask) — strip-scopes answer-shaped scans."""
+    def _active_blocks(self, mask) -> Optional[np.ndarray]:
+        """EXACT kernel-grid block ids holding the mask's nonzero rows
+        (None for an empty mask) — the block-sparse worklist side for
+        answer-shaped scans (DESIGN.md §15): blocks between two active runs
+        are absent from the launch, not merely scope-pruned inside it."""
         idx = np.flatnonzero(np.asarray(mask))
         if idx.size == 0:
             return None
-        block = self.config.dc_block
-        return int(idx[0]) // block, int(idx[-1]) // block + 1
+        return np.unique(idx // self.config.dc_block).astype(np.int32)
 
     def _clean_dc(
         self, step: CleanStep, report: ExecReport, record_cost: bool = True
@@ -956,6 +989,7 @@ class Daisy:
         cold_ids = scope_ledger.cold_strips()
         cold_frac = scope_ledger.cold_fraction
         row_blocks = None
+        row_block_ids = None
         if mode == "incremental":
             row_scope = answer & live
         else:
@@ -971,7 +1005,11 @@ class Daisy:
                 mode = "full"  # covers every cold strip == remaining full clean
             if len(sel):
                 row_scope = jnp.asarray(scope_ledger.strip_mask(sel)) & live
-                row_blocks = scope_ledger.strip_blocks(sel, self.config.dc_block)
+                # EXACT cold-strip block ids, not the covering range: warm
+                # strips between cold ones never launch (DESIGN.md §15)
+                row_block_ids = scope_ledger.strip_block_ids(
+                    sel, self.config.dc_block
+                )
             else:
                 row_scope = jnp.zeros_like(rel.valid)
         rep.mode = mode if mode != "strip" else rep.mode
@@ -994,9 +1032,10 @@ class Daisy:
         mesh = self._detect_mesh(step)
         col_scope = rel.valid
         if mode == "incremental":
-            row_blocks = self._covering_blocks(row_scope)
+            row_block_ids = self._active_blocks(row_scope)
         rel, det = self._dc_detect_repair(
-            rel, dc, row_scope, col_scope, row_blocks, mesh, cm, rep
+            rel, dc, row_scope, col_scope, row_blocks, mesh, cm, rep,
+            row_block_ids=row_block_ids,
         )
         repaired = (det.t1_count > 0) | (det.t2_count > 0)
         rep.repaired = int(np.asarray(jnp.sum(repaired & row_scope)))
@@ -1004,10 +1043,13 @@ class Daisy:
         if mode == "incremental":
             # partners of the answer (the DC-correlated tuples, §4.2) get
             # their role fixes too — the incremental matrix strip
-            # [rest x answer].
+            # [rest x answer], partner-side-restricted to the answer's
+            # active blocks (DESIGN.md §15)
             partner_scope = rel.valid & ~answer
             rel, det2 = self._dc_detect_repair(
-                rel, dc, partner_scope, answer, None, mesh, cm, rep
+                rel, dc, partner_scope, answer, None, mesh, cm, rep,
+                row_block_ids=self._active_blocks(partner_scope),
+                col_block_ids=self._active_blocks(answer),
             )
             rep.extra = int(
                 np.asarray(

@@ -99,6 +99,10 @@ class StripLedger:
     cold_per_strip: np.ndarray = dataclasses.field(default=None)  # (n_strips,) int64
     fresh: set = dataclasses.field(default_factory=set)  # strip ids with fresh rows
     pending: List[PendingIngest] = dataclasses.field(default_factory=list)
+    # cumulative DC-scan launch geometry for this scope (DESIGN.md §15):
+    # tile pairs actually launched vs skipped by the ledger worklist
+    tiles_launched: int = 0
+    tiles_skipped: int = 0
 
     def __post_init__(self):
         if self.cold_per_strip is None:
@@ -131,6 +135,28 @@ class StripLedger:
         lo = min(strips) * per
         hi = (max(strips) + 1) * per
         return lo, min(hi, -(-self.capacity // block))
+
+    def strip_block_ids(self, strips: Sequence[int], block: int) -> np.ndarray:
+        """EXACT kernel-grid block-row ids of the given strips — the
+        block-sparse worklist entry (DESIGN.md §15).  Unlike
+        ``strip_blocks``, warm strips between the selected ones are not
+        covered at all: their tile pairs are absent from the launch, not
+        merely scope-pruned inside it.  ``strip_rows`` is block-aligned,
+        so each strip contributes a whole run of block ids."""
+        per = self.strip_rows // block
+        nb = -(-self.capacity // block)
+        ids = [
+            b
+            for s in sorted(set(strips))
+            for b in range(s * per, min((s + 1) * per, nb))
+        ]
+        return np.asarray(ids, dtype=np.int32)
+
+    def cold_block_ids(self, block: int) -> np.ndarray:
+        """Block-row ids of every strip still holding cold rows — the row
+        side of a full-scope ledger-masked scan (checked x checked tile
+        pairs never launch, DESIGN.md §15)."""
+        return self.strip_block_ids(np.flatnonzero(self.cold_per_strip > 0), block)
 
     # ------------------------------------------------------------- progress
     @property
@@ -186,6 +212,13 @@ class StripLedger:
         data gets cleaned."""
         self.fresh = {s for s in self.fresh
                       if s < self.n_strips and self.cold_per_strip[s] > 0}
+
+    def note_tiles(self, launched: int, skipped: int) -> None:
+        """Accumulate one DC scan's launch geometry (DESIGN.md §15):
+        ``launched`` tile pairs ran, ``skipped`` were pruned from the
+        launch by the ledger worklist.  Called under the executor lock."""
+        self.tiles_launched += int(launched)
+        self.tiles_skipped += int(skipped)
 
     # -------------------------------------------------------------- commits
     def bump(self) -> None:
@@ -336,6 +369,8 @@ class WorkLedger:
                 "strips_done": s.strips_done,
                 "strips_total": s.n_strips,
                 "cold_rows": s.cold_count,
+                "tiles_launched": s.tiles_launched,
+                "tiles_skipped": s.tiles_skipped,
             }
             for s in self._scopes.values()
             if s.capacity > 0

@@ -80,6 +80,12 @@ class ShardedDetectInfo:
     # work partition the sharded service will consume).  None when the
     # caller did not report a strip size.
     per_shard_strips: Optional[List[int]] = None
+    # launch geometry of the per-shard scans (DESIGN.md §15): the routed
+    # layout compacts valid rows to a per-shard slot prefix, so each
+    # shard's fused scan restricts to the occupied block range — tile
+    # pairs over empty slack slots never launch.  DC path only (0 for FDs).
+    tiles_launched: int = 0
+    tiles_total: int = 0
 
 
 def default_n_shards(mesh) -> int:
@@ -198,9 +204,11 @@ def _per_shard_fn(fn, mesh, n_shards: int):
     return jax.jit(batched)
 
 
-def _per_shard(fn, mesh, n_shards: int, args, tracer=None):
+def _per_shard(fn, mesh, n_shards: int, args, tracer=None, span_attrs=None):
     tracer = tracer if tracer is not None else NULL_TRACER
-    with tracer.span("dist.shard_scan", n_shards=n_shards), mesh:
+    with tracer.span(
+        "dist.shard_scan", n_shards=n_shards, **(span_attrs or {})
+    ), mesh:
         return _per_shard_fn(fn, mesh, n_shards)(args)
 
 
@@ -243,15 +251,22 @@ def _info(res, n_shards, factor, retries, cap,
 @functools.lru_cache(maxsize=None)
 def _dc_local_scan(ops: Tuple[str, ...], flipped: Tuple[str, ...],
                    t1_red: Tuple[str, ...], t2_red: Tuple[str, ...],
-                   block: int):
-    """One logical shard's both-role scan; cached so its identity (and
-    thus the jit cache in ``_per_shard_fn``) is stable across calls."""
+                   block: int, hi: int):
+    """One logical shard's FUSED both-role scan (DESIGN.md §15); cached so
+    its identity (and thus the jit cache in ``_per_shard_fn``) is stable
+    across calls.  ``hi`` is the occupied block range of the routed slot
+    prefix — the shuffle compacts valid rows to slots ``[0, count_s)``, so
+    restricting every shard to blocks ``[0, hi)`` (``hi`` from the MAX
+    occupancy, a static host value under vmap/shard_map) launches no tile
+    pair over pure capacity slack while staying bit-identical."""
 
     def local_scan(args):
         lc, rc, lrs, lcs = args
-        t1c, t1s = kops.dc_role_scan(lc, rc, ops, lrs, lcs, t1_red, block=block)
-        t2c, t2s = kops.dc_role_scan(rc, lc, flipped, lrs, lcs, t2_red, block=block)
-        return (t1c, t2c, tuple(t1s), tuple(t2s))
+        res = kops.dc_pair_scan(
+            lc, rc, ops, flipped, lrs, lcs, t1_red, t2_red, block=block,
+            row_blocks=(0, hi), col_blocks=(0, hi),
+        )
+        return (res.t1_count, res.t2_count, res.t1_stat, res.t2_stat)
 
     return local_scan
 
@@ -324,9 +339,25 @@ def detect_dc_sharded_info(
         rs,
         cs,
     )
+
+    # Occupied block range of the routed slot prefix (DESIGN.md §15): the
+    # shuffle compacts each shard's valid rows to slots [0, count_s), so the
+    # fused scan restricts to blocks [0, hi) with hi sized by the fullest
+    # shard — a static host value, shared by all shards under vmap.
+    cap_routed = int(res.valid.shape[-1])
+    nb_local = max(-(-cap_routed // block), 1)
+    occupancy = int(np.asarray(jnp.sum(res.valid.astype(jnp.int32), axis=1)).max())
+    hi = min(nb_local, max(-(-occupancy // block), 1))
+    tiles_launched = n_shards * hi * hi
+    tiles_total = n_shards * nb_local * nb_local
+
     t1c, t2c, t1s, t2s = _per_shard(
-        _dc_local_scan(ops, flipped, t1_red, t2_red, block), mesh, n_shards,
-        args, tracer=tracer,
+        _dc_local_scan(ops, flipped, t1_red, t2_red, block, hi), mesh,
+        n_shards, args, tracer=tracer,
+        span_attrs={
+            "tiles_launched": tiles_launched,
+            "tiles_skipped": tiles_total - tiles_launched,
+        },
     )
 
     t1_count = _unroute(t1c, res.src, res.valid, cap, jnp.int32(0))
@@ -339,8 +370,18 @@ def detect_dc_sharded_info(
         _unroute(s, res.src, res.valid, cap, _identity(dtypes[n], red))
         for s, n, red in zip(t2s, l_names, t2_red)
     )
-    det = DCDetectResult(t1_count, t2_count, t1_stat, t2_stat)
-    return det, _info(res, n_shards, factor, retries, cap, strip_rows=strip_rows)
+    per_tile = kops._tile_bytes(
+        kops.distinct_columns(args[0], args[1])[0], args[0], args[1], block
+    )
+    det = DCDetectResult(
+        t1_count, t2_count, t1_stat, t2_stat,
+        tiles_launched=tiles_launched, tiles_total=tiles_total,
+        bytes_moved=tiles_launched * per_tile,
+    )
+    info = _info(res, n_shards, factor, retries, cap, strip_rows=strip_rows)
+    info.tiles_launched = tiles_launched
+    info.tiles_total = tiles_total
+    return det, info
 
 
 def detect_dc_sharded(

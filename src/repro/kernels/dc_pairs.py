@@ -1,23 +1,35 @@
-"""Pallas TPU kernel: blocked theta-join scan for DC violation detection.
+"""Pallas TPU kernels: blocked theta-join scans for DC violation detection.
 
 The paper's DC error detection partitions the cartesian-product matrix into
 ``p`` partitions and prunes partitions whose boundary ranges cannot produce a
-violation (§4.2, Fig. 3/4).  On TPU this becomes a 2-D grid of (BM, BN) VMEM
+violation (§4.2, Fig. 3/4).  On TPU this becomes a grid of (BM, BN) VMEM
 tiles over the comparison matrix:
 
+* **block-sparse worklist grid** (DESIGN.md §15): the launch is a 1-D grid
+  over a host-built worklist of *active* tile pairs — the cross product of
+  the active row-block ids and active col-block ids.  The two id arrays are
+  scalar-prefetched (``pltpu.PrefetchScalarGridSpec``) so the BlockSpec
+  index maps read ``rid[g // ncols]`` / ``cid[g % ncols]`` before the tile's
+  DMAs are issued; checked x checked tile pairs are never launched and never
+  move bytes.  A contiguous ``(lo, hi)`` range and the dense grid are just
+  worklists that happen to be ``arange``s — one code path for all of them;
 * per-tile **bound pruning**: per-block min/max of each atom column are
-  precomputed (scope-masked) and prefetched; a tile whose bounds make some
-  atom unsatisfiable everywhere is skipped with ``@pl.when`` — the paper's
-  partition pruning, at tile granularity;
-* the 8x128-lane VPU evaluates the atom predicates for all BM*BN pairs of the
-  tile at once (the Spark version loops over JVM tuples);
-* outputs are row-indexed (violation count + per-atom extremal partner value,
-  which is the bound of the candidate *range* fix, Example 4) and accumulate
-  across the column grid dimension — the column dim is innermost so each
-  output block is revisited consecutively, as the TPU grid requires.
+  precomputed (scope-masked) and indexed by the same prefetched ids; a tile
+  whose bounds make some atom unsatisfiable everywhere skips its body with
+  ``@pl.when`` — the paper's partition pruning, at tile granularity, on top
+  of the worklist sparsity;
+* the 8x128-lane VPU evaluates the atom predicates for all BM*BN pairs of
+  the tile at once (the Spark version loops over JVM tuples);
+* outputs are row-indexed (violation count + per-atom extremal partner
+  value, which is the bound of the candidate *range* fix, Example 4) and
+  accumulate across the worklist's column-innermost order — each output
+  block is revisited consecutively, as the TPU grid requires.
 
-Both tuple roles (t1, t2) use this same kernel: the t2 role flips the atoms
-(see core/detect.py), keeping every output row-indexed.
+Two entry points share the machinery: ``dc_role_scan_pallas`` is the
+single-role scan, and ``dc_pair_scan_pallas`` fuses BOTH tuple roles (t1
+with the atoms as written, t2 with them flipped — see core/detect.py) into
+one launch over one worklist, loading each distinct atom column once per
+tile instead of twice (DESIGN.md §15's fusion contract).
 """
 
 from __future__ import annotations
@@ -29,14 +41,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
-
-_INT_MIN = np.int32(np.iinfo(np.int32).min)
-_INT_MAX = np.int32(np.iinfo(np.int32).max)
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _ident(dtype, reduce):
+    """Reduce identity in the array's OWN dtype (int8 atoms carry int8
+    identities — the host-side stat decode maps them back, DESIGN.md §15)."""
     if jnp.issubdtype(dtype, jnp.integer):
-        return _INT_MAX if reduce == "min" else _INT_MIN
+        info = jnp.iinfo(dtype)
+        return jnp.array(info.max if reduce == "min" else info.min, dtype)
     return jnp.array(np.inf if reduce == "min" else -np.inf, dtype)
 
 
@@ -68,24 +81,87 @@ def _cmp(op, a, b):
     }[op]()
 
 
-def _kernel(
+def resolve_block_ids(
+    nb: int,
+    blocks: Optional[Tuple[int, int]] = None,
+    block_ids=None,
+) -> np.ndarray:
+    """Normalize a grid restriction into the sorted, deduped worklist-side
+    id array: explicit ``block_ids`` win, else the contiguous ``(lo, hi)``
+    range, else the full grid.  Every launch path funnels through this, so
+    dense and contiguous-strip scans are just worklists that happen to be
+    ``arange``s."""
+    if block_ids is not None:
+        ids = np.unique(np.asarray(block_ids, dtype=np.int32).ravel())
+        if ids.size and (ids[0] < 0 or ids[-1] >= nb):
+            raise ValueError(f"block ids {ids!r} outside grid [0, {nb})")
+        return ids
+    if blocks is None:
+        return np.arange(nb, dtype=np.int32)
+    lo, hi = blocks
+    if not (0 <= lo < hi <= nb):
+        raise ValueError(f"blocks {blocks!r} outside grid [0, {nb})")
+    return np.arange(lo, hi, dtype=np.int32)
+
+
+def _empty_role_outputs(n, r_cols, reduces):
+    """What a scan with an empty worklist returns: count 0 and the reduce
+    identity everywhere — exactly the full grid's value for scoped-out rows."""
+    count = jnp.zeros((n,), jnp.int32)
+    stats = [
+        jnp.full((n,), _ident(c.dtype, red), c.dtype)
+        for c, red in zip(r_cols, reduces)
+    ]
+    return count, stats
+
+
+def _stitch(outs, row_ids, block, npad, n, r_cols, reduces):
+    """Scatter worklist-compact outputs back to full row width: rows in
+    unlaunched blocks take count 0 / the reduce identity (what the dense
+    grid gives scoped-out rows)."""
+    nb = npad // block
+    if row_ids.size == nb:  # dense row coverage: outputs are already in order
+        return outs[0][:n], [s[:n] for s in outs[1:]]
+    ridx = jnp.asarray(
+        (row_ids[:, None] * block + np.arange(block)[None, :]).reshape(-1)
+    )
+    count = jnp.zeros((npad,), jnp.int32).at[ridx].set(outs[0])[:n]
+    stats = [
+        jnp.full((npad,), _ident(c.dtype, red), c.dtype).at[ridx].set(s)[:n]
+        for s, c, red in zip(outs[1:], r_cols, reduces)
+    ]
+    return count, stats
+
+
+def _block_bounds(vals, scope, reduce, nb, block):
+    """Scope-masked per-block bounds (identity outside scope keeps the
+    ``@pl.when`` pruning sound)."""
+    ident = _ident(vals.dtype, reduce)
+    masked = jnp.where(scope > 0, vals, ident)
+    resh = masked.reshape(nb, block)
+    return jnp.min(resh, axis=1) if reduce == "min" else jnp.max(resh, axis=1)
+
+
+# --------------------------------------------------------- single-role kernel
+def _role_kernel(
     ops: Tuple[str, ...],
     reduces: Tuple[str, ...],
     bm: int,
     bn: int,
-    row_lo: int,
-    col_lo: int,
+    ncols: int,
     *refs,
 ):
     n_atoms = len(ops)
-    # ref layout: l[a] (bm,), r[a] (bn,), rs (bm,), cs (bn,),
-    #             lmin[a] (1,), lmax[a] (1,), rmin[a] (1,), rmax[a] (1,),
-    #             out: count (bm,), stat[a] (bm,)
+    # scalar-prefetch refs first (the worklist id arrays), then
+    # l[a] (bm,), r[a] (bn,), rs (bm,), cs (bn,),
+    # lmin[a] lmax[a] rmin[a] rmax[a] (1,) each, out: count (bm,), stat[a] (bm,)
     it = iter(refs)
 
     def take(count):
         return tuple(next(it) for _ in range(count))
 
+    (rid_ref,) = take(1)
+    (cid_ref,) = take(1)
     lv = take(n_atoms)
     r = take(n_atoms)
     (rs,) = take(1)
@@ -97,10 +173,9 @@ def _kernel(
     (count_ref,) = take(1)
     stat_refs = take(n_atoms)
 
-    i = pl.program_id(0)
-    j = pl.program_id(1)
+    g = pl.program_id(0)
 
-    @pl.when(j == 0)
+    @pl.when(g % ncols == 0)
     def _init():
         count_ref[...] = jnp.zeros_like(count_ref)
         for a in range(n_atoms):
@@ -118,13 +193,13 @@ def _kernel(
 
     @pl.when(possible)
     def _compute():
-        # row/col ids are GLOBAL indices: a strip-scoped launch (row_lo or
-        # col_lo > 0) shifts the grid but the diagonal exclusion still
-        # compares untranslated positions.
-        row_ids = (row_lo + i) * bm + jax.lax.broadcasted_iota(
+        # row/col ids are GLOBAL indices read from the prefetched worklist:
+        # the diagonal exclusion compares untranslated positions no matter
+        # which tile pairs actually launch.
+        row_ids = rid_ref[g // ncols] * bm + jax.lax.broadcasted_iota(
             jnp.int32, (bm, bn), 0
         )
-        col_ids = (col_lo + j) * bn + jax.lax.broadcasted_iota(
+        col_ids = cid_ref[g % ncols] * bn + jax.lax.broadcasted_iota(
             jnp.int32, (bm, bn), 1
         )
         viol = (
@@ -146,6 +221,20 @@ def _kernel(
             )
 
 
+def _worklist_specs(bm, bn, ncols):
+    """BlockSpecs for a 1-D worklist launch: row-side inputs index through
+    the prefetched ``rid`` array, col-side through ``cid``; outputs are
+    compact over the worklist's row order (stitched back host-side).
+    Returns ``(row, col, bound_row, bound_col, out)`` specs for callers to
+    compose in their own operand order."""
+    row_spec = pl.BlockSpec((bm,), lambda g, rid, cid: (rid[g // ncols],))
+    col_spec = pl.BlockSpec((bn,), lambda g, rid, cid: (cid[g % ncols],))
+    bound_i = pl.BlockSpec((1,), lambda g, rid, cid: (rid[g // ncols],))
+    bound_j = pl.BlockSpec((1,), lambda g, rid, cid: (cid[g % ncols],))
+    out_spec = pl.BlockSpec((bm,), lambda g, rid, cid: (g // ncols,))
+    return row_spec, col_spec, bound_i, bound_j, out_spec
+
+
 def dc_role_scan_pallas(
     l_cols: Sequence[jnp.ndarray],
     r_cols: Sequence[jnp.ndarray],
@@ -157,35 +246,31 @@ def dc_role_scan_pallas(
     interpret: bool = False,
     row_blocks: Optional[Tuple[int, int]] = None,
     col_blocks: Optional[Tuple[int, int]] = None,
+    row_block_ids=None,
+    col_block_ids=None,
 ) -> Tuple[jnp.ndarray, List[jnp.ndarray]]:
-    """Blocked theta-join violation scan (see module docstring).
+    """Blocked theta-join violation scan, one role (see module docstring).
 
     Shapes are padded to a multiple of ``block``; padded rows are scoped out.
 
-    ``row_blocks=(lo, hi)`` is the strip-scoped entry (DESIGN.md §11): the
-    grid only launches row blocks in ``[lo, hi)`` — a partition-strip of the
-    comparison matrix — so a strip scan costs ``(hi - lo) * nb`` tiles
-    instead of the ``nb * nb`` full grid.  Rows outside the launched range
-    get count 0 and the reduce identity, exactly as if they were scoped out.
-
-    ``col_blocks=(lo, hi)`` symmetrically restricts the PARTNER grid
-    dimension — the ingest-delta entry (DESIGN.md §12): checked rows scan
-    only the fresh column strip, ``nrb * (hi - lo)`` tiles.  Partners
-    outside the range simply never contribute, as if scoped out.
-    """
+    ``row_block_ids`` / ``col_block_ids`` are the block-sparse worklist
+    entry (DESIGN.md §15): only the cross product of the given row and col
+    block ids is launched — the executor passes the ledger's cold block
+    geometry so checked x checked tile pairs never launch.  ``row_blocks``
+    / ``col_blocks`` are the contiguous ``(lo, hi)`` sugar (the §11 strip
+    entry and §12 ingest-delta entry); they resolve to ``arange``
+    worklists.  Rows outside the launched blocks get count 0 and the
+    reduce identity, exactly as if they were scoped out."""
     n_atoms = len(ops)
     n = l_cols[0].shape[0]
     bm = bn = block
     nb = -(-n // block)
     npad = nb * block
-    row_lo, row_hi = (0, nb) if row_blocks is None else row_blocks
-    if not (0 <= row_lo < row_hi <= nb):
-        raise ValueError(f"row_blocks {row_blocks!r} outside grid [0, {nb})")
-    nrb = row_hi - row_lo
-    col_lo, col_hi = (0, nb) if col_blocks is None else col_blocks
-    if not (0 <= col_lo < col_hi <= nb):
-        raise ValueError(f"col_blocks {col_blocks!r} outside grid [0, {nb})")
-    ncb = col_hi - col_lo
+    rid = resolve_block_ids(nb, row_blocks, row_block_ids)
+    cid = resolve_block_ids(nb, col_blocks, col_block_ids)
+    if rid.size == 0 or cid.size == 0:
+        return _empty_role_outputs(n, r_cols, reduces)
+    nrows, ncols = rid.size, cid.size
 
     def pad1(x, fill=0):
         return jnp.pad(x, (0, npad - n), constant_values=fill)
@@ -195,68 +280,254 @@ def dc_role_scan_pallas(
     lp = [pad1(c) for c in l_cols]
     rp = [pad1(c) for c in r_cols]
 
-    # scope-masked per-block bounds (identity outside scope keeps pruning sound)
-    def block_bounds(vals, scope, reduce):
-        ident = _ident(vals.dtype, reduce)
-        masked = jnp.where(scope > 0, vals, ident)
-        resh = masked.reshape(nb, block)
-        return jnp.min(resh, axis=1) if reduce == "min" else jnp.max(resh, axis=1)
+    lmin = [_block_bounds(c, rs, "min", nb, block) for c in lp]
+    lmax = [_block_bounds(c, rs, "max", nb, block) for c in lp]
+    rmin = [_block_bounds(c, cs, "min", nb, block) for c in rp]
+    rmax = [_block_bounds(c, cs, "max", nb, block) for c in rp]
 
-    lmin = [block_bounds(c, rs, "min") for c in lp]
-    lmax = [block_bounds(c, rs, "max") for c in lp]
-    rmin = [block_bounds(c, cs, "min") for c in rp]
-    rmax = [block_bounds(c, cs, "max") for c in rp]
-
-    # row-side inputs index from the strip offset; outputs are compact over
-    # the launched range (Pallas leaves unvisited output blocks undefined,
-    # so the full-width result is stitched back on the host side below).
-    row_spec = pl.BlockSpec((bm,), lambda i, j: (row_lo + i,))
-    col_spec = pl.BlockSpec((bn,), lambda i, j: (col_lo + j,))
-    bound_i = pl.BlockSpec((1,), lambda i, j: (row_lo + i,))
-    bound_j = pl.BlockSpec((1,), lambda i, j: (col_lo + j,))
-    out_spec = pl.BlockSpec((bm,), lambda i, j: (i,))
-
+    row_s, col_s, b_i, b_j, out_s = _worklist_specs(bm, bn, ncols)
     in_specs = (
-        [row_spec] * n_atoms  # l
-        + [col_spec] * n_atoms  # r
-        + [row_spec, col_spec]  # rs, cs
-        + [bound_i] * n_atoms  # lmin
-        + [bound_i] * n_atoms  # lmax
-        + [bound_j] * n_atoms  # rmin
-        + [bound_j] * n_atoms  # rmax
+        [row_s] * n_atoms + [col_s] * n_atoms + [row_s, col_s]
+        + [b_i] * 2 * n_atoms + [b_j] * 2 * n_atoms
     )
-    out_specs = [out_spec] + [out_spec] * n_atoms
-    out_shape = [jax.ShapeDtypeStruct((nrb * block,), jnp.int32)] + [
-        jax.ShapeDtypeStruct((nrb * block,), c.dtype) for c in r_cols
+    out_shape = [jax.ShapeDtypeStruct((nrows * block,), jnp.int32)] + [
+        jax.ShapeDtypeStruct((nrows * block,), c.dtype) for c in r_cols
     ]
-
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(nrows * ncols,),
+        in_specs=in_specs,
+        out_specs=[out_s] * (1 + n_atoms),
+    )
     kernel = functools.partial(
-        _kernel, tuple(ops), tuple(reduces), bm, bn, row_lo, col_lo
+        _role_kernel, tuple(ops), tuple(reduces), bm, bn, ncols
     )
     outs = pl.pallas_call(
         kernel,
-        grid=(nrb, ncb),
-        in_specs=in_specs,
-        out_specs=out_specs,
+        grid_spec=grid_spec,
         out_shape=out_shape,
         interpret=interpret,
-    )(*lp, *rp, rs, cs, *lmin, *lmax, *rmin, *rmax)
-    if row_blocks is None:
-        count = outs[0][:n]
-        stats = [s[:n] for s in outs[1:]]
-        return count, stats
-    # stitch the strip back into full-width outputs: unlaunched rows take
-    # count 0 / the reduce identity (what the full grid gives scoped-out rows)
-    lo_row = row_lo * block
-    count = (
-        jnp.zeros((npad,), jnp.int32)
-        .at[lo_row : lo_row + nrb * block]
-        .set(outs[0])[:n]
+    )(
+        jnp.asarray(rid), jnp.asarray(cid),
+        *lp, *rp, rs, cs, *lmin, *lmax, *rmin, *rmax,
     )
-    stats = [
-        jnp.full((npad,), _ident(c.dtype, red), c.dtype)
-        .at[lo_row : lo_row + nrb * block]
-        .set(s)[:n]
-        for s, c, red in zip(outs[1:], r_cols, reduces)
-    ]
-    return count, stats
+    return _stitch(outs, rid, block, npad, n, r_cols, reduces)
+
+
+# ---------------------------------------------------------- fused-role kernel
+def _pair_kernel(
+    ops: Tuple[str, ...],
+    flipped: Tuple[str, ...],
+    t1_reduces: Tuple[str, ...],
+    t2_reduces: Tuple[str, ...],
+    l_idx: Tuple[int, ...],
+    r_idx: Tuple[int, ...],
+    n_distinct: int,
+    bm: int,
+    bn: int,
+    ncols: int,
+    *refs,
+):
+    """Both tuple roles in one tile visit (DESIGN.md §15 fusion contract):
+    role t1 evaluates the atoms as written over (row, col), role t2 the
+    flipped atoms — each distinct atom column's row and col tiles are
+    loaded ONCE and serve both roles."""
+    n_atoms = len(ops)
+    it = iter(refs)
+
+    def take(count):
+        return tuple(next(it) for _ in range(count))
+
+    (rid_ref,) = take(1)
+    (cid_ref,) = take(1)
+    rowv = take(n_distinct)  # distinct columns, row-side tiles
+    (rs,) = take(1)
+    colv = take(n_distinct)  # distinct columns, col-side tiles
+    (cs,) = take(1)
+    row_min = take(n_distinct)  # per-block bounds under the ROW scope
+    row_max = take(n_distinct)
+    col_min = take(n_distinct)  # per-block bounds under the COL scope
+    col_max = take(n_distinct)
+    (t1_count_ref,) = take(1)
+    (t2_count_ref,) = take(1)
+    t1_stat_refs = take(n_atoms)
+    t2_stat_refs = take(n_atoms)
+
+    g = pl.program_id(0)
+
+    @pl.when(g % ncols == 0)
+    def _init():
+        t1_count_ref[...] = jnp.zeros_like(t1_count_ref)
+        t2_count_ref[...] = jnp.zeros_like(t2_count_ref)
+        for a in range(n_atoms):
+            t1_stat_refs[a][...] = jnp.full_like(
+                t1_stat_refs[a], _ident(t1_stat_refs[a].dtype, t1_reduces[a])
+            )
+            t2_stat_refs[a][...] = jnp.full_like(
+                t2_stat_refs[a], _ident(t2_stat_refs[a].dtype, t2_reduces[a])
+            )
+
+    possible1 = jnp.bool_(True)
+    possible2 = jnp.bool_(True)
+    for a, (op, fop) in enumerate(zip(ops, flipped)):
+        li, ri = l_idx[a], r_idx[a]
+        possible1 = possible1 & _tile_possible(
+            op, row_min[li][0], row_max[li][0], col_min[ri][0], col_max[ri][0]
+        )
+        possible2 = possible2 & _tile_possible(
+            fop, row_min[ri][0], row_max[ri][0], col_min[li][0], col_max[li][0]
+        )
+
+    row_ids = rid_ref[g // ncols] * bm + jax.lax.broadcasted_iota(
+        jnp.int32, (bm, bn), 0
+    )
+    col_ids = cid_ref[g % ncols] * bn + jax.lax.broadcasted_iota(
+        jnp.int32, (bm, bn), 1
+    )
+    base = (
+        (rs[...] > 0)[:, None]
+        & (cs[...] > 0)[None, :]
+        & (row_ids != col_ids)
+    )
+
+    def accumulate(viol, count_ref, stat_refs, stat_src, reduces):
+        count_ref[...] += jnp.sum(viol.astype(jnp.int32), axis=1)
+        for a, red in enumerate(reduces):
+            ident = _ident(stat_refs[a].dtype, red)
+            vals = jnp.where(viol, colv[stat_src[a]][...][None, :], ident)
+            tile = jnp.min(vals, axis=1) if red == "min" else jnp.max(vals, axis=1)
+            stat_refs[a][...] = (
+                jnp.minimum(stat_refs[a][...], tile)
+                if red == "min"
+                else jnp.maximum(stat_refs[a][...], tile)
+            )
+
+    @pl.when(possible1)
+    def _role_t1():
+        viol = base
+        for a, op in enumerate(ops):
+            viol = viol & _cmp(
+                op, rowv[l_idx[a]][...][:, None], colv[r_idx[a]][...][None, :]
+            )
+        accumulate(viol, t1_count_ref, t1_stat_refs, r_idx, t1_reduces)
+
+    @pl.when(possible2)
+    def _role_t2():
+        viol = base
+        for a, fop in enumerate(flipped):
+            viol = viol & _cmp(
+                fop, rowv[r_idx[a]][...][:, None], colv[l_idx[a]][...][None, :]
+            )
+        accumulate(viol, t2_count_ref, t2_stat_refs, l_idx, t2_reduces)
+
+
+def distinct_columns(
+    l_cols: Sequence[jnp.ndarray], r_cols: Sequence[jnp.ndarray]
+) -> Tuple[List[jnp.ndarray], Tuple[int, ...], Tuple[int, ...]]:
+    """Dedup the atom columns by array identity: same-attribute atoms (the
+    common DC shape) load one tile per side for both roles.  Returns the
+    distinct column list plus per-atom indices into it."""
+    distinct: List[jnp.ndarray] = []
+    index: dict = {}
+
+    def at(col):
+        key = id(col)
+        if key not in index:
+            index[key] = len(distinct)
+            distinct.append(col)
+        return index[key]
+
+    l_idx = tuple(at(c) for c in l_cols)
+    r_idx = tuple(at(c) for c in r_cols)
+    return distinct, l_idx, r_idx
+
+
+def dc_pair_scan_pallas(
+    l_cols: Sequence[jnp.ndarray],
+    r_cols: Sequence[jnp.ndarray],
+    ops: Sequence[str],
+    flipped: Sequence[str],
+    row_scope: jnp.ndarray,
+    col_scope: jnp.ndarray,
+    t1_reduces: Sequence[str],
+    t2_reduces: Sequence[str],
+    block: int = 256,
+    interpret: bool = False,
+    row_blocks: Optional[Tuple[int, int]] = None,
+    col_blocks: Optional[Tuple[int, int]] = None,
+    row_block_ids=None,
+    col_block_ids=None,
+):
+    """Fused BOTH-role scan: one worklist launch computes the t1 detection
+    (atoms as written) and the t2 detection (``flipped`` atoms) over the
+    same tiles — the relax→detect role scans that used to be two separate
+    launches over identical tile pairs (DESIGN.md §15).
+
+    Returns ``(t1_count, t1_stats, t2_count, t2_stats)``, each full row
+    width, bit-identical to two ``dc_role_scan`` launches."""
+    n_atoms = len(ops)
+    n = l_cols[0].shape[0]
+    bm = bn = block
+    nb = -(-n // block)
+    npad = nb * block
+    rid = resolve_block_ids(nb, row_blocks, row_block_ids)
+    cid = resolve_block_ids(nb, col_blocks, col_block_ids)
+    if rid.size == 0 or cid.size == 0:
+        t1c, t1s = _empty_role_outputs(n, r_cols, t1_reduces)
+        t2c, t2s = _empty_role_outputs(n, l_cols, t2_reduces)
+        return t1c, t1s, t2c, t2s
+    nrows, ncols = rid.size, cid.size
+
+    distinct, l_idx, r_idx = distinct_columns(l_cols, r_cols)
+    n_distinct = len(distinct)
+
+    def pad1(x, fill=0):
+        return jnp.pad(x, (0, npad - n), constant_values=fill)
+
+    rs = pad1(row_scope).astype(jnp.int32)
+    cs = pad1(col_scope).astype(jnp.int32)
+    dp = [pad1(c) for c in distinct]
+    row_min = [_block_bounds(c, rs, "min", nb, block) for c in dp]
+    row_max = [_block_bounds(c, rs, "max", nb, block) for c in dp]
+    col_min = [_block_bounds(c, cs, "min", nb, block) for c in dp]
+    col_max = [_block_bounds(c, cs, "max", nb, block) for c in dp]
+
+    row_s, col_s, b_i, b_j, out_s = _worklist_specs(bm, bn, ncols)
+    in_specs = (
+        [row_s] * n_distinct + [row_s] + [col_s] * n_distinct + [col_s]
+        + [b_i] * 2 * n_distinct + [b_j] * 2 * n_distinct
+    )
+    out_shape = (
+        [jax.ShapeDtypeStruct((nrows * block,), jnp.int32)] * 2
+        + [jax.ShapeDtypeStruct((nrows * block,), c.dtype) for c in r_cols]
+        + [jax.ShapeDtypeStruct((nrows * block,), c.dtype) for c in l_cols]
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(nrows * ncols,),
+        in_specs=in_specs,
+        out_specs=[out_s] * (2 + 2 * n_atoms),
+    )
+    kernel = functools.partial(
+        _pair_kernel, tuple(ops), tuple(flipped), tuple(t1_reduces),
+        tuple(t2_reduces), l_idx, r_idx, n_distinct, bm, bn, ncols,
+    )
+    outs = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(
+        jnp.asarray(rid), jnp.asarray(cid),
+        *dp, rs, *dp, cs, *row_min, *row_max, *col_min, *col_max,
+    )
+    # outs order mirrors out_shape: t1_count, t2_count, t1_stats, t2_stats
+    t1c, t1s = _stitch(
+        (outs[0],) + tuple(outs[2:2 + n_atoms]), rid, block, npad, n,
+        r_cols, t1_reduces,
+    )
+    t2c, t2s = _stitch(
+        (outs[1],) + tuple(outs[2 + n_atoms:]), rid, block, npad, n,
+        l_cols, t2_reduces,
+    )
+    return t1c, t1s, t2c, t2s

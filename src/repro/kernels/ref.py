@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.dc_pairs import resolve_block_ids
+
 
 def _apply_op(a: jnp.ndarray, op: str, b: jnp.ndarray) -> jnp.ndarray:
     if op == "==":
@@ -35,15 +37,14 @@ def _apply_op(a: jnp.ndarray, op: str, b: jnp.ndarray) -> jnp.ndarray:
 
 
 def _identity(dtype, reduce: str):
-    if reduce == "min":
-        return jnp.array(np.iinfo(np.int32).max, dtype) if jnp.issubdtype(
-            dtype, jnp.integer
-        ) else jnp.array(np.inf, dtype)
-    if reduce == "max":
-        return jnp.array(np.iinfo(np.int32).min, dtype) if jnp.issubdtype(
-            dtype, jnp.integer
-        ) else jnp.array(-np.inf, dtype)
-    raise ValueError(reduce)
+    """Reduce identity in the array's OWN dtype — int8-encoded atoms must
+    carry int8 identities or the sentinel overflows (DESIGN.md §15)."""
+    if reduce not in ("min", "max"):
+        raise ValueError(reduce)
+    if jnp.issubdtype(dtype, jnp.integer):
+        info = jnp.iinfo(dtype)
+        return jnp.array(info.max if reduce == "min" else info.min, dtype)
+    return jnp.array(np.inf if reduce == "min" else -np.inf, dtype)
 
 
 def dc_role_scan(
@@ -56,6 +57,8 @@ def dc_role_scan(
     block: int = 256,
     row_blocks: Tuple[int, int] | None = None,
     col_blocks: Tuple[int, int] | None = None,
+    row_block_ids=None,
+    col_block_ids=None,
 ) -> Tuple[jnp.ndarray, List[jnp.ndarray]]:
     """Oracle for the ``dc_pairs`` theta-join kernel (one role).
 
@@ -76,38 +79,44 @@ def dc_role_scan(
     that block range — the ingest-delta entry (DESIGN.md §12): scanning
     checked rows against only the freshly-appended column strip makes the
     delta cost O(checked x fresh) instead of O(checked x n).
+
+    ``row_block_ids`` / ``col_block_ids`` generalize both to an arbitrary
+    set of block ids — the ledger's block-sparse worklist (DESIGN.md §15):
+    only the cross product of the given row and col blocks is scanned.
+    All four restrictions resolve through ``resolve_block_ids``, so these
+    ARE the mask semantics the Pallas worklist kernel is validated against.
     """
     n = l_cols[0].shape[0]
     nb = -(-n // block)
-    lo_row, hi_row = 0, n
-    if row_blocks is not None:
-        lo, hi = row_blocks
-        if not (0 <= lo < hi <= nb):
-            raise ValueError(f"row_blocks {row_blocks!r} outside grid [0, {nb})")
-        lo_row, hi_row = lo * block, min(hi * block, n)
-    lo_cb, hi_cb = 0, nb
-    if col_blocks is not None:
-        lo_cb, hi_cb = col_blocks
-        if not (0 <= lo_cb < hi_cb <= nb):
-            raise ValueError(f"col_blocks {col_blocks!r} outside grid [0, {nb})")
-    pad = nb * block - n
-    rs = row_scope[lo_row:hi_row]
-    l_cols = [c[lo_row:hi_row] for c in l_cols]
+    rid = resolve_block_ids(nb, row_blocks, row_block_ids)
+    cid = resolve_block_ids(nb, col_blocks, col_block_ids)
+    idents = [_identity(r.dtype, red) for r, red in zip(r_cols, reduces)]
+    if rid.size == 0 or cid.size == 0:
+        return (
+            jnp.zeros((n,), jnp.int32),
+            [jnp.full((n,), idents[a], r_cols[a].dtype) for a in range(len(ops))],
+        )
+    npad = nb * block
+    pad = npad - n
     cs = jnp.pad(col_scope, (0, pad))
     r_pad = [jnp.pad(r, (0, pad)) for r in r_cols]
-    idents = [_identity(r.dtype, red) for r, red in zip(r_cols, reduces)]
-    # GLOBAL row ids: the diagonal exclusion must compare a strip row's true
-    # index against the untranslated column ids
-    row_ids = jnp.arange(lo_row, hi_row, dtype=jnp.int32)
-    m = hi_row - lo_row
+    # gather the worklist's row blocks into a compact strip; GLOBAL row ids
+    # ride along so the diagonal exclusion compares untranslated positions
+    ridx = (rid[:, None] * block + np.arange(block)[None, :]).reshape(-1)
+    jridx = jnp.asarray(ridx)
+    rs = jnp.pad(row_scope, (0, pad))[jridx]
+    l_g = [jnp.pad(c, (0, pad))[jridx] for c in l_cols]
+    row_ids = jridx.astype(jnp.int32)
+    m = ridx.size
+    cid_arr = jnp.asarray(cid)
 
-    def body(jb, state):
+    def body(t, state):
         count, stats = state
-        sl = jb * block
+        sl = cid_arr[t] * block
         cs_t = jax.lax.dynamic_slice_in_dim(cs, sl, block)
         col_ids = sl + jnp.arange(block, dtype=jnp.int32)
         viol = rs[:, None] & cs_t[None, :] & (row_ids[:, None] != col_ids[None, :])
-        for a, (lcol, op) in enumerate(zip(l_cols, ops)):
+        for a, (lcol, op) in enumerate(zip(l_g, ops)):
             r_t = jax.lax.dynamic_slice_in_dim(r_pad[a], sl, block)
             viol = viol & _apply_op(lcol[:, None], op, r_t[None, :])
         count = count + jnp.sum(viol.astype(jnp.int32), axis=1)
@@ -128,17 +137,49 @@ def dc_role_scan(
         jnp.zeros((m,), jnp.int32),
         tuple(jnp.full((m,), idents[a], r_cols[a].dtype) for a in range(len(ops))),
     )
-    count, stats = jax.lax.fori_loop(lo_cb, hi_cb, body, init)
-    if row_blocks is None:
-        return count, list(stats)
-    # stitch the strip back into full-width outputs (unscanned rows get the
-    # same values the full scan gives scoped-out rows)
-    count = jnp.zeros((n,), jnp.int32).at[lo_row:hi_row].set(count)
+    count, stats = jax.lax.fori_loop(0, int(cid.size), body, init)
+    if rid.size == nb:  # dense row coverage: compact outputs are in order
+        return count[:n], [s[:n] for s in stats]
+    # stitch the worklist strip back into full-width outputs (unscanned rows
+    # get the same values the full scan gives scoped-out rows)
+    count = jnp.zeros((npad,), jnp.int32).at[jridx].set(count)[:n]
     stats = [
-        jnp.full((n,), idents[a], r_cols[a].dtype).at[lo_row:hi_row].set(s)
+        jnp.full((npad,), idents[a], r_cols[a].dtype).at[jridx].set(s)[:n]
         for a, s in enumerate(stats)
     ]
     return count, stats
+
+
+def dc_pair_scan(
+    l_cols: Sequence[jnp.ndarray],
+    r_cols: Sequence[jnp.ndarray],
+    ops: Sequence[str],
+    flipped: Sequence[str],
+    row_scope: jnp.ndarray,
+    col_scope: jnp.ndarray,
+    t1_reduces: Sequence[str],
+    t2_reduces: Sequence[str],
+    block: int = 256,
+    row_blocks: Tuple[int, int] | None = None,
+    col_blocks: Tuple[int, int] | None = None,
+    row_block_ids=None,
+    col_block_ids=None,
+):
+    """Oracle for the fused both-role scan: role t1 evaluates the atoms as
+    written, role t2 the ``flipped`` atoms with the column sides swapped
+    (core/detect.py's second launch).  Fusion is an execution detail of the
+    Pallas kernel — the oracle simply runs the two role scans."""
+    restr = dict(
+        block=block, row_blocks=row_blocks, col_blocks=col_blocks,
+        row_block_ids=row_block_ids, col_block_ids=col_block_ids,
+    )
+    t1_count, t1_stats = dc_role_scan(
+        l_cols, r_cols, ops, row_scope, col_scope, t1_reduces, **restr
+    )
+    t2_count, t2_stats = dc_role_scan(
+        r_cols, l_cols, flipped, row_scope, col_scope, t2_reduces, **restr
+    )
+    return t1_count, t1_stats, t2_count, t2_stats
 
 
 def semijoin(

@@ -106,7 +106,10 @@ def rollup(events: Iterable[SpanEvent]) -> Dict[str, Dict[str, float]]:
     children (per-thread stack walk over t0-sorted spans), so self-times
     across phases partition the covered wall-clock without double
     counting nested phases (clean.detect inside serve.execute inside a
-    step)."""
+    step).  Phases whose spans carry tile attrs (the block-sparse DC
+    scans, DESIGN.md §15) additionally aggregate ``tiles_launched`` /
+    ``tiles_skipped`` sums, so the rollup attributes launch work, not
+    just wall-clock."""
     by_thread: Dict[str, List[SpanEvent]] = {}
     for ev in events:
         by_thread.setdefault(ev.thread, []).append(ev)
@@ -129,6 +132,10 @@ def rollup(events: Iterable[SpanEvent]) -> Dict[str, Dict[str, float]]:
             agg["total_s"] += ev.dur
             agg["self_s"] += max(selfs[id(ev)], 0.0)
             agg["max_s"] = max(agg["max_s"], ev.dur)
+            for key in ("tiles_launched", "tiles_skipped"):
+                val = ev.attrs.get(key)
+                if isinstance(val, (int, float)):
+                    agg[key] = agg.get(key, 0) + int(val)
     return out
 
 
@@ -178,11 +185,22 @@ def top_spans(events: Iterable[SpanEvent], k: int = 10) -> List[SpanEvent]:
 
 
 def format_rollup(roll: Dict[str, Dict[str, float]]) -> str:
-    """Human-readable per-phase table, largest self-time first."""
-    lines = [f"{'phase':<28} {'count':>7} {'total':>10} {'self':>10} {'max':>10}"]
+    """Human-readable per-phase table, largest self-time first.  Phases
+    that aggregated tile attrs get a trailing launched/skipped column."""
+    tiles = any("tiles_launched" in agg for agg in roll.values())
+    header = f"{'phase':<28} {'count':>7} {'total':>10} {'self':>10} {'max':>10}"
+    if tiles:
+        header += f" {'tiles l/s':>17}"
+    lines = [header]
     for name, agg in sorted(roll.items(), key=lambda kv: -kv[1]["self_s"]):
-        lines.append(
+        line = (
             f"{name:<28} {agg['count']:>7d} {agg['total_s']*1e3:>8.1f}ms "
             f"{agg['self_s']*1e3:>8.1f}ms {agg['max_s']*1e3:>8.1f}ms"
         )
+        if tiles and "tiles_launched" in agg:
+            line += (
+                f" {int(agg['tiles_launched']):>8d}/"
+                f"{int(agg.get('tiles_skipped', 0)):<8d}"
+            )
+        lines.append(line)
     return "\n".join(lines)

@@ -66,6 +66,11 @@ class ServiceMetrics:
     batched: int = 0  # hits on a fingerprint executed earlier in the same step
     detect_calls: int = 0  # executor detect invocations while serving (fg)
     repair_calls: int = 0
+    # block-sparse launch geometry (DESIGN.md §15): tile pairs the fg DC
+    # scans launched vs the checked×checked pairs the ledger worklist let
+    # them skip — the kernel-level counterpart of detect_calls
+    tiles_launched: int = 0
+    tiles_skipped: int = 0
     clean_steps: int = 0  # non-skipped cleaning steps across executions
     skipped_steps: int = 0
     rejected: int = 0  # session-limit denials
@@ -133,11 +138,17 @@ class ServiceMetrics:
         self.recent_reports.append(report.asdict())
         del self.recent_reports[: -self.max_reports]
 
-    def observe_work(self, detect_delta: int, repair_delta: int) -> None:
-        """Attribute executor detect/repair deltas to the foreground
-        serving path (serving thread)."""
+    def observe_work(
+        self, detect_delta: int, repair_delta: int,
+        tiles_launched_delta: int = 0, tiles_skipped_delta: int = 0,
+    ) -> None:
+        """Attribute executor detect/repair deltas (and the DC scans' tile
+        launch/skip deltas, DESIGN.md §15) to the foreground serving path
+        (serving thread)."""
         self.detect_calls += detect_delta
         self.repair_calls += repair_delta
+        self.tiles_launched += tiles_launched_delta
+        self.tiles_skipped += tiles_skipped_delta
 
     def observe_idle(self, seconds: float) -> None:
         """Accumulate step-loop wait time (serving thread)."""
@@ -292,6 +303,8 @@ class ServiceMetrics:
             "batched": self.batched,
             "detect_calls": self.detect_calls,
             "repair_calls": self.repair_calls,
+            "tiles_launched": self.tiles_launched,
+            "tiles_skipped": self.tiles_skipped,
             "clean_steps": self.clean_steps,
             "skipped_steps": self.skipped_steps,
             "rejected": self.rejected,

@@ -358,6 +358,7 @@ class QueryServer:
         self._record_queue_wait(ticket)
         with daisy.lock:
             d0, r0 = daisy.detect_calls, daisy.repair_calls
+            tl0, ts0 = daisy.tiles_launched, daisy.tiles_skipped
             with self.tracer.span("serve.cache_lookup", seq=ticket.seq) as sp:
                 vector = daisy.scope_versions(ticket.deps)
                 result = self.cache.get(ticket.fingerprint, vector)
@@ -377,7 +378,8 @@ class QueryServer:
                     self.metrics.errors += 1
                     # partial cleaning work before the failure still happened
                     self.metrics.observe_work(
-                        daisy.detect_calls - d0, daisy.repair_calls - r0
+                        daisy.detect_calls - d0, daisy.repair_calls - r0,
+                        daisy.tiles_launched - tl0, daisy.tiles_skipped - ts0,
                     )
                     ticket.error = exc
                     ticket.session.fail(ticket.slo)
@@ -397,7 +399,8 @@ class QueryServer:
                     executed_this_step.add(ticket.fingerprint)
                     self.metrics.observe_execution(result.report)
             self.metrics.observe_work(
-                daisy.detect_calls - d0, daisy.repair_calls - r0
+                daisy.detect_calls - d0, daisy.repair_calls - r0,
+                daisy.tiles_launched - tl0, daisy.tiles_skipped - ts0,
             )
             ticket.result = result
             ticket.clean_version = daisy.clean_version

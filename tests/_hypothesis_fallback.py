@@ -4,7 +4,7 @@ The container this repo develops in has no hypothesis wheel and cannot
 install one; CI installs the real package, so this shim only activates as
 a fallback (see conftest.py).  It implements exactly the surface the test
 suite uses — ``given`` / ``settings`` / ``strategies.{integers, lists,
-booleans, composite}`` — by running each property ``max_examples`` times
+booleans, sampled_from, composite}`` — by running each property ``max_examples`` times
 against seeded-random draws.  No shrinking, no database: failures report
 the drawn values via the assertion itself.
 """
@@ -31,6 +31,11 @@ def integers(min_value, max_value):
 
 def booleans():
     return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+def sampled_from(elements):
+    seq = list(elements)
+    return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
 
 
 def lists(elements, min_size=0, max_size=10):
@@ -92,6 +97,7 @@ def build_module():
     st = types.ModuleType("hypothesis.strategies")
     st.integers = integers
     st.booleans = booleans
+    st.sampled_from = sampled_from
     st.lists = lists
     st.composite = composite
     mod.strategies = st

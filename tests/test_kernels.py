@@ -8,8 +8,14 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+from repro.core.constraints import DC, Atom, flip_op
+from repro.core.detect import _T1_REDUCE
+from repro.core.executor import Daisy, DaisyConfig
+from repro.core.operators import Pred, Query
+from repro.core.relation import make_relation
+from repro.kernels import ops as kops
 from repro.kernels import ref
-from repro.kernels.dc_pairs import dc_role_scan_pallas
+from repro.kernels.dc_pairs import dc_role_scan_pallas, resolve_block_ids
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.semijoin import semijoin_pallas
 
@@ -81,6 +87,193 @@ class TestDCPairsKernel:
         c_pal, s_pal = dc_role_scan_pallas(*args, block=32, interpret=True)
         np.testing.assert_array_equal(np.asarray(c_ref), np.asarray(c_pal))
         np.testing.assert_array_equal(np.asarray(s_ref[0]), np.asarray(s_pal[0]))
+
+
+# ------------------------------------------------- block-sparse worklist (§15)
+def _pair_scan(a, op, rs, cs, force, block=16, **restr):
+    flipped = (flip_op(op),)
+    return kops.dc_pair_scan(
+        [a], [a], (op,), flipped, rs, cs,
+        (_T1_REDUCE[op],), (_T1_REDUCE[flip_op(op)],),
+        block=block, force=force, **restr,
+    )
+
+
+class TestDCPairsBlockSparse:
+    """The ledger-masked worklist contract (DESIGN.md §15): restricting the
+    row side to a block worklist is EXACTLY the dense scan with the
+    non-worklist rows scoped out — both roles, counts and stats — and the
+    launch geometry matches the worklist."""
+
+    @given(
+        st.integers(4, 96),
+        st.integers(0, 2**31 - 1),
+        st.sampled_from(["<", "<=", ">", ">=", "==", "!="]),
+        st.sampled_from(["ref", "interpret"]),
+    )
+    @settings(**SETTINGS)
+    def test_masked_equals_dense_on_cold_subset(self, n, seed, op, force):
+        block = 16
+        rng = np.random.default_rng(seed)
+        a = jnp.asarray(rng.integers(0, 6, n).astype(np.int32))
+        rs = jnp.asarray(rng.random(n) < 0.7)
+        cs = jnp.asarray(rng.random(n) < 0.7)
+        nb = -(-n // block)
+        ids = np.flatnonzero(rng.random(nb) < 0.5).astype(np.int32)
+        cold_rows = np.zeros(nb * block, bool)
+        for b in ids:
+            cold_rows[b * block : (b + 1) * block] = True
+        sparse = _pair_scan(a, op, rs, cs, force, row_block_ids=ids)
+        dense = _pair_scan(
+            a, op, rs & jnp.asarray(cold_rows[:n]), cs, "ref"
+        )
+        assert sparse.tiles.launched == int(ids.size) * nb
+        np.testing.assert_array_equal(
+            np.asarray(sparse.t1_count), np.asarray(dense.t1_count)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(sparse.t2_count), np.asarray(dense.t2_count)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(sparse.t1_stat[0]), np.asarray(dense.t1_stat[0])
+        )
+        np.testing.assert_array_equal(
+            np.asarray(sparse.t2_stat[0]), np.asarray(dense.t2_stat[0])
+        )
+
+    @pytest.mark.parametrize("force", ["ref", "interpret"])
+    def test_all_checked_zero_launches(self, force):
+        """A fully converged scope launches nothing and returns zeros and
+        reduce identities — with no kernel call at all."""
+        n = 48
+        rng = np.random.default_rng(1)
+        a = jnp.asarray(rng.integers(0, 6, n).astype(np.int32))
+        scope = jnp.ones(n, bool)
+        res = _pair_scan(
+            a, "<", scope, scope, force,
+            row_block_ids=np.array([], dtype=np.int32),
+        )
+        assert res.tiles.launched == 0
+        assert not np.asarray(res.t1_count).any()
+        assert not np.asarray(res.t2_count).any()
+        np.testing.assert_array_equal(
+            np.asarray(res.t1_stat[0]), np.iinfo(np.int32).min
+        )
+        np.testing.assert_array_equal(
+            np.asarray(res.t2_stat[0]), np.iinfo(np.int32).max
+        )
+
+    @pytest.mark.parametrize("force", ["ref", "interpret"])
+    def test_all_cold_matches_unrestricted(self, force):
+        n, block = 80, 16
+        rng = np.random.default_rng(2)
+        a = jnp.asarray(rng.integers(0, 9, n).astype(np.int32))
+        rs = jnp.asarray(rng.random(n) < 0.8)
+        cs = jnp.asarray(rng.random(n) < 0.8)
+        nb = -(-n // block)
+        full = _pair_scan(
+            a, "<=", rs, cs, force, row_block_ids=np.arange(nb, dtype=np.int32)
+        )
+        dense = _pair_scan(a, "<=", rs, cs, "ref")
+        assert full.tiles.launched == dense.tiles.launched == nb * nb
+        np.testing.assert_array_equal(
+            np.asarray(full.t1_count), np.asarray(dense.t1_count)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(full.t1_stat[0]), np.asarray(dense.t1_stat[0])
+        )
+
+    def test_resolve_block_ids(self):
+        np.testing.assert_array_equal(resolve_block_ids(4), [0, 1, 2, 3])
+        np.testing.assert_array_equal(resolve_block_ids(4, blocks=(1, 3)), [1, 2])
+        np.testing.assert_array_equal(
+            resolve_block_ids(4, block_ids=np.array([3, 1, 3])), [1, 3]
+        )
+        with pytest.raises(ValueError):
+            resolve_block_ids(4, block_ids=np.array([4]))
+
+
+# ------------------------------------------------- compressed encodings (§15)
+class TestEncodings:
+    def test_boundary_columns_fall_back(self):
+        """Columns straddling the exactness boundary must demote: int8
+        overflow, non-integral floats, NaN."""
+        overflow = np.arange(200, dtype=np.int32)  # max 199 > 127
+        # 0.1f32 etc. do NOT round-trip through bf16, and are not integral
+        nonint = np.array([0.1, 0.2, 0.3], dtype=np.float32)
+        nanny = np.array([1.0, np.nan], dtype=np.float32)
+        small = np.arange(-5, 6, dtype=np.int32)
+        plan = kops.plan_dc_encodings(
+            {"o": jnp.asarray(overflow), "s": jnp.asarray(small)},
+            [("o", "o", "<"), ("s", "s", ">")],
+        )
+        assert plan["o"].kind == "orig" and plan["s"].kind == "int8"
+        assert kops.plan_dc_encodings(
+            {"x": jnp.asarray(nonint)}, [("x", "x", "<")]
+        ) is None
+        plan_nan = kops.plan_dc_encodings(
+            {"x": jnp.asarray(nanny)}, [("x", "x", "==")]
+        )
+        assert plan_nan is None or plan_nan["x"].kind == "orig"
+
+    def test_atom_sides_share_kind(self):
+        """Both sides of an atom must land on one kind — an int8-able column
+        compared against an overflow column demotes to orig."""
+        plan = kops.plan_dc_encodings(
+            {
+                "a": jnp.asarray(np.arange(10, dtype=np.int32)),
+                "b": jnp.asarray(np.arange(1000, 1010, dtype=np.int32)),
+            },
+            [("a", "b", "<")],
+        )
+        assert plan is None
+
+    def test_encode_decode_roundtrip(self):
+        vals = np.array([3.0, -7.0, 3.0, 100.0], dtype=np.float32)
+        plan = kops.plan_dc_encodings(
+            {"v": jnp.asarray(vals)}, [("v", "v", "==")]
+        )
+        assert plan["v"].kind == "code"
+        codes = kops.encode_column(jnp.asarray(vals), plan["v"])
+        dec = kops.decode_stat(
+            codes, jnp.ones(4, jnp.int32), plan["v"], np.float32, "min"
+        )
+        np.testing.assert_array_equal(np.asarray(dec), vals)
+
+    @pytest.mark.parametrize("encode", [True, False])
+    def test_bit_identical_through_daisy(self, encode):
+        """A DC mixing an encodable column with a boundary one produces the
+        same answers and candidate state with the planner on or off."""
+        n = 96
+        rng = np.random.default_rng(23)
+        qty = rng.integers(0, 100, n).astype(np.float32)  # int8-able
+        price = rng.uniform(0.0, 500.0, n).astype(np.float32)  # orig
+        rel = make_relation(
+            {"qty": qty, "price": price}, overlay=["qty", "price"],
+            k=8, rules=["qp"],
+        )
+        dc = DC("qp", [Atom("qty", "<", "qty"), Atom("price", ">", "price")])
+        cfg = DaisyConfig(
+            use_cost_model=False, accuracy_threshold=2.0,
+            dc_block=16, strip_rows=16, dc_partitions=4,
+            kernel_encodings=encode,
+        )
+        daisy = Daisy({"t": rel}, {"t": [dc]}, cfg)
+        res = daisy.execute(Query("t", preds=(Pred("qty", ">=", 0.0),)))
+        if not hasattr(TestEncodings, "_baseline"):
+            TestEncodings._baseline = {}
+        base = TestEncodings._baseline
+        key_mask = np.asarray(res.mask)
+        cand = {
+            a: np.asarray(daisy.db["t"].cand[a]) for a in ("qty", "price")
+        }
+        if "mask" in base:
+            np.testing.assert_array_equal(key_mask, base["mask"])
+            for a in cand:
+                np.testing.assert_array_equal(cand[a], base["cand"][a])
+        else:
+            base["mask"] = key_mask
+            base["cand"] = cand
 
 
 # ------------------------------------------------------------------ semijoin

@@ -199,7 +199,13 @@ class TestWorkLedger:
         assert ledger.version("t", "r") == 2
         prog = ledger.progress()
         assert prog == {
-            "t/r": {"strips_done": 2, "strips_total": 2, "cold_rows": 0}
+            "t/r": {
+                "strips_done": 2,
+                "strips_total": 2,
+                "cold_rows": 0,
+                "tiles_launched": 0,
+                "tiles_skipped": 0,
+            }
         }
         assert ledger.support("t", "r") == 1.0
         assert ledger.support("nope", "x") == 1.0  # unknown scopes read warm
